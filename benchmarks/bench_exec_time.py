@@ -1,0 +1,35 @@
+"""Paper Figs. 2–4: execution time of all seven algorithms for varying
+minimum support on (stand-ins for) c20d10k, chess and mushroom."""
+
+from .common import ALGOS, DATASETS, emit, load, timed_mine
+
+MIN_SUPS = {
+    "c20d10k": [0.25, 0.20, 0.15, 0.125],
+    "chess": [0.75, 0.68, 0.60, 0.55],
+    "mushroom": [0.45, 0.40, 0.35, 0.31],
+}
+
+
+def run(fast: bool = False):
+    rows = []
+    for ds in DATASETS:
+        txns, n_items = load(ds)
+        sups = MIN_SUPS[ds][-2:] if fast else MIN_SUPS[ds]
+        algos = ["spc", "fpc", "vfpc", "optimized_vfpc"] if fast else ALGOS
+        base_levels = None
+        for sup in sups:
+            for algo in algos:
+                res, wall = timed_mine(txns, n_items, sup, algo)
+                levels = {k: v[0].shape[0] for k, v in res.levels.items()}
+                if (sup, ds) == (sups[0], ds) and base_levels is None:
+                    base_levels = levels
+                rows.append((f"fig_exec/{ds}/{algo}/sup={sup}",
+                             round(wall * 1e6 / max(res.dispatches, 1), 1),
+                             f"wall={wall:.3f}s phases={res.n_phases} "
+                             f"dispatches={res.dispatches} max_k={max(levels)}"))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

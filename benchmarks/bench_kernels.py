@@ -1,0 +1,50 @@
+"""Support-count kernel microbenchmark + roofline terms for the counting phase.
+
+On CPU the jnp (XLA) path is the production path and is timed; the Pallas
+kernel is validated in interpret mode (its TPU roofline terms are derived
+analytically: the kernel is a pure VPU bitwise op stream).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.bitset import pack_itemsets
+from repro.data import dataset_by_name
+from repro.kernels import support_count
+
+from .common import emit
+
+
+def run(fast: bool = False):
+    rows = []
+    txns, n_items = dataset_by_name("mushroom", scale=0.25 if fast else 1.0)
+    db = pack_itemsets([list(t) for t in txns], n_items)
+    rng = np.random.default_rng(0)
+    for C in [256, 2048] if fast else [256, 2048, 16384]:
+        idx = rng.integers(0, len(db), C)
+        cands = db[idx]
+        out = support_count(cands, db, impl="jnp")
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            out = support_count(cands, db, impl="jnp")
+        jax.block_until_ready(out)
+        wall = (time.perf_counter() - t0) / reps
+        pairs = C * len(db)
+        # analytic TPU roofline for the Pallas kernel (bitwise AND+cmp+reduce):
+        W = db.shape[1]
+        ops = pairs * (W * 3 + 1)            # and, cmp, and-reduce, add
+        bytes_hbm = (C * W + len(db) * W) * 4  # each tile read once (blocked)
+        rows.append((f"kernel_support_count/C={C}/T={len(db)}",
+                     round(wall * 1e6, 1),
+                     f"pairs={pairs} gops={ops/wall/1e9:.2f}(cpu) "
+                     f"tpu_compute_s={ops/197e12:.2e} tpu_mem_s={bytes_hbm/819e9:.2e}"))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

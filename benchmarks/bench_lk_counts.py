@@ -1,0 +1,21 @@
+"""Paper Table 6: number of frequent k-itemsets per level per dataset."""
+
+from .common import DATASETS, emit, load, timed_mine
+
+
+def run(fast: bool = False):
+    rows = []
+    for ds in (["mushroom"] if fast else list(DATASETS)):
+        txns, n_items = load(ds)
+        sup = DATASETS[ds]["min_sup"]
+        res, wall = timed_mine(txns, n_items, sup, "spc")
+        lk = [res.levels[k][0].shape[0] for k in sorted(res.levels)]
+        rows.append((f"tbl6_lk/{ds}/sup={sup}",
+                     round(wall * 1e6 / max(sum(lk), 1), 2),
+                     "L=" + "/".join(map(str, lk))))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

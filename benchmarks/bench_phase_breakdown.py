@@ -1,0 +1,32 @@
+"""Paper Tables 3–5 (SPC/FPC/VFPC/DPC/ETDPC phase-time breakdown) and
+Tables 10–12 (optimized vs simple multi-pass phase elapsed time)."""
+
+from .common import DATASETS, emit, load, timed_mine
+
+TBL35 = ["spc", "fpc", "vfpc", "dpc", "etdpc"]
+TBL1012 = ["vfpc", "optimized_vfpc", "etdpc", "optimized_etdpc"]
+
+
+def run(fast: bool = False):
+    rows = []
+    datasets = ["mushroom"] if fast else list(DATASETS)
+    for ds in datasets:
+        txns, n_items = load(ds)
+        sup = DATASETS[ds]["min_sup"]
+        for algo in (TBL35 + TBL1012 if not fast else ["vfpc", "optimized_vfpc"]):
+            res, wall = timed_mine(txns, n_items, sup, algo)
+            per_phase = ";".join(
+                f"k{p.k_start}-{p.k_start + p.npass - 1}:{p.elapsed_seconds*1e3:.0f}ms"
+                f"(gen {p.gen_seconds*1e3:.0f} cnt {p.count_seconds*1e3:.0f})"
+                for p in res.phases)
+            total = sum(p.elapsed_seconds for p in res.phases)
+            rows.append((f"tbl_phase/{ds}/{algo}",
+                         round(total * 1e6 / max(res.n_phases, 1), 1),
+                         f"total={total:.3f}s actual={wall:.3f}s "
+                         f"phases={res.n_phases} [{per_phase}]"))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

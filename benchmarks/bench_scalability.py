@@ -1,0 +1,23 @@
+"""Paper Fig. 5(a): execution time on increasing dataset size (fixed min_sup,
+fixed mapper count — here fixed device count)."""
+
+from .common import emit, load, timed_mine
+
+
+def run(fast: bool = False):
+    rows = []
+    scales = [0.05, 0.1] if fast else [0.05, 0.1, 0.2, 0.4]
+    for algo in (["optimized_vfpc"] if fast
+                 else ["vfpc", "optimized_vfpc", "etdpc", "optimized_etdpc"]):
+        for s in scales:
+            txns, n_items = load("c20d10k", scale=s)
+            res, wall = timed_mine(txns, n_items, 0.25, algo)
+            rows.append((f"fig5a_scale/{algo}/n={len(txns)}",
+                         round(wall * 1e6 / len(txns), 2),
+                         f"wall={wall:.3f}s phases={res.n_phases}"))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

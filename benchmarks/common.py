@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import mine
+from repro.core.mapreduce import MapReduceRuntime
+from repro.data import dataset_by_name
+
+ALGOS = ["spc", "fpc", "dpc", "vfpc", "etdpc", "optimized_vfpc", "optimized_etdpc"]
+
+# scaled-down stand-ins for the paper's three datasets (CPU-sized); min_sup
+# chosen so mining reaches ≥5 levels (the multi-pass regime the paper targets)
+DATASETS = {
+    "c20d10k": {"scale": 0.10, "min_sup": 0.125},
+    "chess": {"scale": 0.10, "min_sup": 0.55},
+    "mushroom": {"scale": 0.08, "min_sup": 0.31},
+}
+
+
+def load(name: str, scale=None, seed: int = 0):
+    return dataset_by_name(name, seed=seed, scale=scale or DATASETS[name]["scale"])
+
+
+def timed_mine(txns, n_items, min_sup, algorithm, **kw):
+    runtime = MapReduceRuntime()
+    t0 = time.perf_counter()
+    res = mine(txns, n_items=n_items, min_sup=min_sup, algorithm=algorithm,
+               runtime=runtime, **kw)
+    wall = time.perf_counter() - t0
+    return res, wall
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

@@ -1,0 +1,54 @@
+"""Serve a small model with batched requests and paper-policy multi-step
+decode fusion — the serving-layer application of the paper's technique.
+
+Ragged prompts (continuous batching), EOS handling with skipped-pruning
+("optimized" engines trim post-EOS tokens at phase end), and a policy
+comparison showing dispatch amortization.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def main():
+    cfg = get_config("smollm-135m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    B, max_len, max_new = 8, 12, 48
+    lens = rng.integers(4, max_len + 1, B).astype(np.int32)
+    prompts = np.zeros((B, max_len), np.int32)
+    for i, l in enumerate(lens):
+        prompts[i, :l] = rng.integers(1, cfg.vocab_size, l)
+
+    print(f"{B} requests, prompt lens {lens.tolist()}, {max_new} new tokens\n")
+    print(f"{'policy':<18} {'dispatches':>10} {'widths'}")
+    outs = {}
+    for algo in ["spc", "fpc", "vfpc", "etdpc", "optimized_vfpc"]:
+        eng = ServeEngine(model, params, cache_len=max_len + max_new + 8,
+                          algorithm=algo)
+        t0 = time.perf_counter()
+        toks, recs = eng.generate(prompts, prompt_lens=lens,
+                                  max_new_tokens=max_new, eos_id=-1)
+        wall = time.perf_counter() - t0
+        outs[algo] = toks
+        widths = [r.npass for r in recs]
+        print(f"{algo:<18} {len(recs):>10} {widths}  ({wall:.2f}s)")
+
+    base = outs["spc"]
+    assert all((v == base).all() for v in outs.values())
+    print("\nall policies produced identical tokens ✓")
+    print("request 0 continuation:", base[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: MapReduce-based Apriori pass-fusion (Singh, Garg & Mishra 2018) as a
+production JAX framework — mining engine, LM model zoo, multi-pod launch,
+roofline tooling.  See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Arch configs: one module per assigned architecture + shape definitions."""
+
+from .base import (ARCH_IDS, ARCH_NAMES, SHAPES, SUBQUADRATIC_ARCHS,
+                   ModelConfig, ShapeConfig, cell_is_runnable, get_config)
+
+__all__ = [
+    "ARCH_IDS", "ARCH_NAMES", "SHAPES", "SUBQUADRATIC_ARCHS",
+    "ModelConfig", "ShapeConfig", "cell_is_runnable", "get_config",
+]

@@ -1,0 +1,14 @@
+"""Core: MapReduce-based Apriori with combined-pass phases (the paper's contribution)."""
+
+from .bitset import pack_itemsets, unpack_itemsets, n_words, singleton_masks
+from .drivers import mine, MiningResult
+from .mapreduce import MapReduceRuntime
+from .policy import ALGORITHMS
+from .rules import Rule, generate_rules
+from .sequential import sequential_apriori
+
+__all__ = [
+    "pack_itemsets", "unpack_itemsets", "n_words", "singleton_masks",
+    "mine", "MiningResult", "MapReduceRuntime", "ALGORITHMS",
+    "Rule", "generate_rules", "sequential_apriori",
+]

@@ -1,0 +1,222 @@
+"""Algorithm drivers: SPC, FPC, DPC, VFPC, ETDPC, Optimized-VFPC, Optimized-ETDPC.
+
+``mine()`` is the public entry point.  It runs Job1 (1-itemset counting) and
+then the policy-controlled phase loop, mirroring the paper's driver classes.
+Per-phase checkpointing makes every driver restartable from the last completed
+phase (phases are idempotent — counting is deterministic — the same property
+Hadoop's task re-execution relies on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from .bitset import pack_itemsets, singleton_masks, unpack_itemsets
+from .mapreduce import MapReduceRuntime
+from .phases import PhaseResult, bucket_pad, run_phase
+from .policy import ALGORITHMS, PhaseStats
+
+
+@dataclasses.dataclass
+class MiningResult:
+    algorithm: str
+    min_sup: float
+    n_txns: int
+    n_items: int
+    levels: dict                    # k -> (masks (n,W) uint32, counts (n,) int64)
+    phases: list                    # list[PhaseResult]
+    total_seconds: float
+    dispatches: int
+    compiles: int
+    straggler_events: int = 0
+
+    def itemsets(self) -> dict:
+        """Friendly view: k -> {sorted item tuple: count}."""
+        out = {}
+        for k, (masks, counts) in sorted(self.levels.items()):
+            if masks.shape[0] == 0:
+                continue
+            out[k] = dict(zip(unpack_itemsets(masks), (int(c) for c in counts)))
+        return out
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.phases)
+
+
+def _ckpt_path(d: str) -> str:
+    return os.path.join(d, "mining_state.npz")
+
+
+def _save_ckpt(d: str, algorithm: str, min_sup: float, levels: dict,
+               history: list, k_prev: int):
+    os.makedirs(d, exist_ok=True)
+    payload = {
+        "meta": np.frombuffer(json.dumps({
+            "algorithm": algorithm, "min_sup": min_sup, "k_prev": k_prev,
+            "history": history,
+        }).encode(), dtype=np.uint8),
+    }
+    for k, (masks, counts) in levels.items():
+        payload[f"masks_{k}"] = masks
+        payload[f"counts_{k}"] = counts
+    tmp = os.path.join(d, "mining_state.tmp.npz")
+    np.savez(tmp, **payload)
+    os.replace(tmp, _ckpt_path(d))
+
+
+def _load_ckpt(d: str):
+    path = _ckpt_path(d)
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    meta = json.loads(bytes(z["meta"]).decode())
+    levels = {}
+    for name in z.files:
+        if name.startswith("masks_"):
+            k = int(name.split("_")[1])
+            levels[k] = (z[name], z[f"counts_{k}"])
+    return meta, levels
+
+
+def mine(transactions=None, *, db_masks: np.ndarray | None = None,
+         n_items: int, min_sup: float, algorithm: str = "optimized_vfpc",
+         runtime: MapReduceRuntime | None = None, policy_kwargs: dict | None = None,
+         checkpoint_dir: str | None = None, resume: bool = True,
+         spec_factor: float = 4.0, max_k: int = 64,
+         balance_shards_by_width: bool = False,
+         count_hook=None) -> MiningResult:
+    """Mine frequent itemsets with the selected pass-combining algorithm.
+
+    Args:
+      transactions: iterable of item-id iterables (alternative: db_masks).
+      db_masks: pre-packed (N, W) uint32 transaction bitmasks.
+      n_items: item catalog size.
+      min_sup: fractional minimum support (0, 1].
+      algorithm: one of policy.ALGORITHMS keys.
+      runtime: MapReduceRuntime (defaults to all local devices, auto impl).
+      checkpoint_dir: if set, per-phase checkpoints are written and ``resume``
+        restarts from the last completed phase.
+      spec_factor: straggler threshold — a counting job slower than
+        spec_factor × the median job time is re-dispatched once (speculative
+        re-execution analogue; idempotent by determinism).
+      count_hook: test hook called around each counting job (for fault and
+        straggler injection).
+
+    Returns: MiningResult.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; options: {sorted(ALGORITHMS)}")
+    policy_cls, optimized = ALGORITHMS[algorithm]
+    policy = policy_cls(**(policy_kwargs or {}))
+    runtime = runtime or MapReduceRuntime()
+
+    if db_masks is None:
+        txn_list = [list(t) for t in transactions]
+        if balance_shards_by_width:
+            # static straggler mitigation: LPT-balance per-shard total width
+            # (the paper's InputSplit-sizing concern, §5.2)
+            from repro.data.loader import balance_shards
+            rt_for_shards = runtime or MapReduceRuntime()
+            runtime = rt_for_shards
+            txn_list = balance_shards(txn_list, rt_for_shards.n_data_shards)
+        db_masks = pack_itemsets(txn_list, n_items)
+    db_masks = np.asarray(db_masks, dtype=np.uint32)
+    n_txns = db_masks.shape[0]
+    min_count = min_sup * n_txns
+
+    t_start = time.perf_counter()
+    db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
+
+    levels: dict = {}
+    phases: list[PhaseResult] = []
+    history: list = []       # [(n_candidates, n_frequent_last, elapsed), ...]
+    straggler_events = 0
+    count_times: list[float] = []
+
+    # -- resume ---------------------------------------------------------------
+    k_prev = None
+    if checkpoint_dir and resume:
+        loaded = _load_ckpt(checkpoint_dir)
+        if loaded is not None:
+            meta, levels = loaded
+            if meta["algorithm"] == algorithm and meta["min_sup"] == min_sup:
+                history = [tuple(h) for h in meta["history"]]
+                k_prev = meta["k_prev"]
+                # Replay policy-internal state: one decide() per completed
+                # post-Job1 phase, with the stats it saw at the time.
+                for j in range(1, len(history)):
+                    policy.decide(
+                        PhaseStats(*history[j - 1]),
+                        PhaseStats(*history[j - 2]) if j >= 2 else None)
+            else:
+                levels, history, k_prev = {}, [], None
+
+    def _stats(i):
+        if i < 0 or i >= len(history):
+            return None
+        return PhaseStats(*history[i])
+
+    # -- Job1: frequent 1-itemsets (OneItemsetMapper/Combiner/Reducer) --------
+    if k_prev is None:
+        t0 = time.perf_counter()
+        singles = singleton_masks(n_items)
+        counts = runtime.phase_count(db_sharded, bucket_pad(singles))[:n_items]
+        keep = counts >= min_count
+        levels[1] = (singles[keep], counts[keep])
+        el = time.perf_counter() - t0
+        phases.append(PhaseResult(1, 1, [n_items], 0.0, el, el,
+                                  [int(keep.sum())], {1: levels[1]}, True))
+        history.append((n_items, int(keep.sum()), el))
+        k_prev = 1
+        if checkpoint_dir:
+            _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
+
+    # -- phase loop ------------------------------------------------------------
+    while k_prev in levels and levels[k_prev][0].shape[0] > 0 and k_prev < max_k:
+        prev_frequent = levels[k_prev][0]
+        mode, val = policy.decide(_stats(len(history) - 1), _stats(len(history) - 2))
+        kwargs = {}
+        if mode == "width":
+            kwargs["npass"] = int(val)
+        else:  # budget_alpha: ct = alpha * |L_prev last level|
+            kwargs["budget"] = float(val) * prev_frequent.shape[0]
+
+        if count_hook is not None:
+            count_hook("phase_start", k_prev)
+        res = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
+                        min_count, optimized=optimized, **kwargs)
+        # Straggler mitigation: re-dispatch a pathologically slow counting job.
+        if count_times and res.count_seconds > spec_factor * float(np.median(count_times)):
+            straggler_events += 1
+            t_re = time.perf_counter()
+            res2 = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
+                             min_count, optimized=optimized, **kwargs)
+            if time.perf_counter() - t_re < res.elapsed_seconds:
+                res = res2
+        count_times.append(res.count_seconds)
+
+        if res.npass == 0:     # no candidates could be generated → done
+            break
+        phases.append(res)
+        levels.update(res.levels)
+        history.append((sum(res.candidate_counts),
+                        res.frequent_counts[-1] if res.frequent_counts else 0,
+                        res.elapsed_seconds))
+        k_prev = res.k_start + res.npass - 1
+        if checkpoint_dir:
+            _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
+
+    # drop trailing empty levels
+    levels = {k: v for k, v in levels.items() if v[0].shape[0] > 0}
+    return MiningResult(
+        algorithm=algorithm, min_sup=min_sup, n_txns=n_txns, n_items=n_items,
+        levels=levels, phases=phases,
+        total_seconds=time.perf_counter() - t_start,
+        dispatches=runtime.stats.dispatches, compiles=runtime.stats.compiles,
+        straggler_events=straggler_events)

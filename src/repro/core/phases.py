@@ -1,0 +1,121 @@
+"""Multi-pass MapReduce phases — the paper's central construct.
+
+A *phase* = candidate generation for one or more consecutive Apriori levels +
+**one** counting job over the sharded database (one dispatch, one psum).
+
+``simple`` phases (VFPC/ETDPC, paper §4.1) call ``apriori_gen`` (join + prune)
+at every level; ``optimized`` phases (Optimized-VFPC/ETDPC, §4.2) prune only in
+the first level and use ``non_apriori_gen`` (join only) afterwards —
+skipped-pruning.  Both produce identical frequent itemsets (paper Fig. 1 and
+our property tests): un-pruned candidates are false positives that support
+counting removes.
+
+XLA adaptation: candidate rows are padded to power-of-two buckets so that each
+(bucket, W) counting shape compiles once and is reused (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .candidates import apriori_gen, non_apriori_gen
+from .mapreduce import MapReduceRuntime
+
+MIN_BUCKET = 256
+
+
+def bucket_pad(cands: np.ndarray, min_bucket: int = MIN_BUCKET,
+               granularity: int = 4096) -> np.ndarray:
+    """Zero-pad rows to a bucketed size (compile-cache friendly).
+
+    Small counts use power-of-two buckets (few shapes, cheap);
+    large counts use multiples of ``granularity`` — §Perf iteration M-C:
+    pow2 buckets pad up to 2× (counting work is proportional to the padded
+    size), multiples of 4k bound waste at <4096 rows for a handful more
+    compiles.
+    """
+    n, w = cands.shape
+    if n <= granularity:
+        b = min_bucket
+        while b < n:
+            b *= 2
+    else:
+        b = ((n + granularity - 1) // granularity) * granularity
+    out = np.zeros((b, w), dtype=np.uint32)
+    out[:n] = cands
+    return out
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    k_start: int                       # first Apriori level counted in this phase
+    npass: int                         # number of levels combined
+    candidate_counts: list             # |C_k| per level (as generated)
+    gen_seconds: float                 # candidate generation (join [+ prune]) time
+    count_seconds: float               # counting job (dispatch) time
+    elapsed_seconds: float             # total phase wall time
+    frequent_counts: list              # |L_k| per level after min_sup filter
+    levels: dict                       # k -> (masks (n,W) uint32, counts (n,) int64)
+    pruned: bool                       # True if every level pruned (simple phase)
+
+
+def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
+              prev_frequent: np.ndarray, k_prev: int, min_count: float,
+              npass: int | None = None, budget: float | None = None,
+              optimized: bool = False, min_bucket: int = MIN_BUCKET) -> PhaseResult:
+    """Execute one (possibly multi-pass) MapReduce phase.
+
+    Exactly one of ``npass`` (fixed width — SPC/FPC/VFPC style) or ``budget``
+    (candidate budget ``ct`` — DPC/ETDPC style: generate levels while the
+    cumulative candidate count ≤ ct, always at least one) must be given.
+
+    Returns a PhaseResult with per-level frequent itemsets.
+    """
+    assert (npass is None) != (budget is None), "exactly one of npass/budget"
+    t0 = time.perf_counter()
+    levels_cands: list[np.ndarray] = []
+    cur = prev_frequent
+    p, total = 0, 0
+    while True:
+        gen = apriori_gen if (p == 0 or not optimized) else non_apriori_gen
+        cands = gen(cur, k_prev + p)
+        if cands.shape[0] == 0:
+            break
+        levels_cands.append(cands)
+        total += cands.shape[0]
+        cur = cands
+        p += 1
+        if npass is not None and p >= npass:
+            break
+        if budget is not None and total > budget:
+            break
+    t_gen = time.perf_counter() - t0
+
+    if not levels_cands:
+        return PhaseResult(k_prev + 1, 0, [], t_gen, 0.0,
+                           time.perf_counter() - t0, [], {}, not optimized)
+
+    all_cands = np.concatenate(levels_cands, axis=0)
+    padded = bucket_pad(all_cands, min_bucket)
+    t1 = time.perf_counter()
+    counts = runtime.phase_count(db_sharded, padded)[:all_cands.shape[0]]
+    t_count = time.perf_counter() - t1
+
+    levels = {}
+    freq_counts = []
+    off = 0
+    for i, cands in enumerate(levels_cands):
+        c = counts[off:off + cands.shape[0]]
+        off += cands.shape[0]
+        keep = c >= min_count
+        levels[k_prev + 1 + i] = (cands[keep], c[keep])
+        freq_counts.append(int(keep.sum()))
+    return PhaseResult(
+        k_start=k_prev + 1, npass=len(levels_cands),
+        candidate_counts=[int(c.shape[0]) for c in levels_cands],
+        gen_seconds=t_gen, count_seconds=t_count,
+        elapsed_seconds=time.perf_counter() - t0,
+        frequent_counts=freq_counts, levels=levels, pruned=not optimized)

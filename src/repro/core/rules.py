@@ -1,0 +1,106 @@
+"""Association-rule generation from mined frequent itemsets.
+
+Apriori is "the basic algorithm of Association Rule Mining" (paper §1); this
+layer completes the pipeline: frequent itemsets → rules  A ⇒ B  with
+confidence = sup(A∪B)/sup(A) and lift = conf/ sup(B)-fraction.
+
+Uses the classic Agrawal–Srikant rule-generation recursion: for each frequent
+itemset, grow consequents level-wise, pruning a consequent when its rule
+fails min_confidence (anti-monotone in the consequent).  All support lookups
+hit the bitmask index of the mining result — no database re-scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from itertools import combinations
+
+import numpy as np
+
+from .bitset import MaskIndex, pack_itemsets
+from .drivers import MiningResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    antecedent: tuple
+    consequent: tuple
+    support: float          # fractional support of A∪B
+    confidence: float
+    lift: float
+
+    def __str__(self):
+        a = ",".join(map(str, self.antecedent))
+        c = ",".join(map(str, self.consequent))
+        return (f"{{{a}}} => {{{c}}} "
+                f"(sup={self.support:.3f} conf={self.confidence:.3f} "
+                f"lift={self.lift:.2f})")
+
+
+class _SupportIndex:
+    """itemset tuple -> count, built from a MiningResult's levels."""
+
+    def __init__(self, result: MiningResult):
+        self.n_txns = result.n_txns
+        self._by_k: dict = {}
+        for k, (masks, counts) in result.levels.items():
+            idx = MaskIndex(masks)
+            self._by_k[k] = (idx, {tuple(t): int(c) for t, c in
+                                   zip(_unpack(masks), counts)})
+
+    def count(self, itemset: tuple) -> int | None:
+        entry = self._by_k.get(len(itemset))
+        if entry is None:
+            return None
+        return entry[1].get(tuple(sorted(itemset)))
+
+
+def _unpack(masks):
+    from .bitset import unpack_itemsets
+    return unpack_itemsets(masks)
+
+
+def generate_rules(result: MiningResult, min_confidence: float = 0.6,
+                   max_rules: int | None = None) -> list[Rule]:
+    """All rules A ⇒ B (A,B nonempty, disjoint, A∪B frequent) meeting
+    ``min_confidence``, sorted by (confidence, lift) descending."""
+    sup = _SupportIndex(result)
+    n = result.n_txns
+    rules: list[Rule] = []
+
+    for k in sorted(result.levels):
+        if k < 2:
+            continue
+        for itemset in _unpack(result.levels[k][0]):
+            full_count = sup.count(itemset)
+            if not full_count:
+                continue
+            # level-wise consequent growth with confidence pruning
+            consequents = [(c,) for c in itemset]
+            while consequents:
+                kept = []
+                for cons in consequents:
+                    ante = tuple(sorted(set(itemset) - set(cons)))
+                    if not ante:
+                        continue
+                    a_count = sup.count(ante)
+                    if not a_count:
+                        continue
+                    conf = full_count / a_count
+                    if conf + 1e-12 < min_confidence:
+                        continue  # prune: superset consequents only lower conf
+                    c_count = sup.count(tuple(sorted(cons)))
+                    lift = (conf / (c_count / n)) if c_count else float("inf")
+                    rules.append(Rule(ante, tuple(sorted(cons)),
+                                      full_count / n, conf, lift))
+                    kept.append(cons)
+                # grow consequents from survivors (classic ap-genrules)
+                nxt = set()
+                for a, b in combinations(kept, 2):
+                    u = tuple(sorted(set(a) | set(b)))
+                    if len(u) == len(a) + 1 and len(u) < len(itemset):
+                        nxt.add(u)
+                consequents = sorted(nxt)
+
+    rules.sort(key=lambda r: (-r.confidence, -r.lift))
+    return rules[:max_rules] if max_rules else rules

@@ -1,0 +1,70 @@
+"""Transaction-file IO and shard balancing.
+
+File format: one transaction per line, space-separated item ids (the standard
+FIMI repository format the paper's datasets use).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bitset import pack_itemsets
+
+
+def save_transactions(path: str, transactions) -> None:
+    with open(path, "w") as f:
+        for t in transactions:
+            f.write(" ".join(str(i) for i in t) + "\n")
+
+
+def load_transactions(path: str) -> tuple[list[list[int]], int]:
+    """Load FIMI-format transactions. Returns (transactions, n_items)."""
+    txns = []
+    max_item = -1
+    with open(path) as f:
+        for line in f:
+            row = [int(x) for x in line.split()]
+            if row:
+                txns.append(row)
+                max_item = max(max_item, max(row))
+    return txns, max_item + 1
+
+
+def dataset_stats(transactions, n_items: int) -> dict:
+    widths = np.array([len(t) for t in transactions])
+    return {
+        "n_txns": len(transactions),
+        "n_items": n_items,
+        "avg_width": float(widths.mean()),
+        "max_width": int(widths.max()),
+        "density": float(widths.mean() / n_items),
+    }
+
+
+def balance_shards(transactions, n_shards: int) -> list[list[int]]:
+    """Static straggler mitigation: order transactions so that per-shard total
+    width (≈ per-mapper work) is balanced under round-robin sharding.
+
+    Greedy LPT assignment by width, then interleave shards back into a single
+    ordering whose round-robin split reproduces the balanced assignment.
+    """
+    order = np.argsort([-len(t) for t in transactions], kind="stable")
+    loads = np.zeros(n_shards, dtype=np.int64)
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    for idx in order:
+        s = int(np.argmin(loads))
+        shards[s].append(int(idx))
+        loads[s] += len(transactions[idx])
+    # interleave: row-major over (position, shard) — round-robin recovers shards
+    out = []
+    maxlen = max(len(s) for s in shards)
+    for pos in range(maxlen):
+        for s in range(n_shards):
+            if pos < len(shards[s]):
+                out.append(transactions[shards[s][pos]])
+    return out
+
+
+def pack_dataset(transactions, n_items: int) -> np.ndarray:
+    """Pack to (N, W) uint32 bitmask matrix."""
+    return pack_itemsets([list(t) for t in transactions], n_items)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the counting hot-spot (+ jnp oracles and wrappers)."""
+
+from .ops import support_count
+from .ref import support_count_ref
+
+__all__ = ["support_count", "support_count_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (small-shape ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def support_count_ref(cands: jnp.ndarray, txns: jnp.ndarray) -> jnp.ndarray:
+    """Support counts of bitmask candidates over bitmask transactions.
+
+    Args:
+      cands: (C, W) uint32 — candidate itemset bitmasks.
+      txns:  (T, W) uint32 — transaction bitmasks.
+
+    Returns:
+      (C,) int32 — for each candidate, the number of transactions t with
+      candidate ⊆ t, i.e. ``all_w((c & t) == c)``.
+    """
+    c = cands[:, None, :]
+    t = txns[None, :, :]
+    match = jnp.all((c & t) == c, axis=-1)  # (C, T)
+    return match.sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+# launcher package: mesh.py, dryrun.py, train.py, serve.py, mine.py

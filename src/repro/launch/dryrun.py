@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on the
+single-pod 16×16 mesh and the 2×16×16 two-pod mesh, and record memory /
+cost / collective analysis for the roofline report.
+
+The XLA_FLAGS line above MUST stay the first statement — jax locks the device
+count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.jsonl [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.model import ShardCtx
+from repro.optim import AdamWConfig, adamw
+from repro.roofline import parse_collectives, roofline_terms
+from repro.train.loop import make_train_step
+
+
+def _batch_shardings(model, shape, mesh, rules, specs):
+    in_axes = model.input_axes(shape)
+    return jax.tree.map(
+        lambda ax, s: sharding.sharding_for(mesh, ax, rules, s.shape),
+        in_axes, specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def build_step(model, shape, mesh, rules):
+    """Returns (fn, example_inputs, in_shardings, out_shardings, donate)."""
+    ctx = ShardCtx(mesh, rules)
+    cfg = model.cfg
+    p_shapes, p_axes = model.abstract_params()
+    psh = sharding.tree_shardings(mesh, p_axes, rules, p_shapes)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        fn = make_train_step(model, opt, mesh, rules, npass=1)
+        state_abs = jax.eval_shape(
+            lambda: {"params": p_shapes, "opt": adamw.init_state(p_shapes, opt)})
+        batch_abs = {k: jax.ShapeDtypeStruct((1,) + v.shape, v.dtype)
+                     for k, v in specs.items()}
+        return fn, (state_abs, batch_abs), None, None  # shardings inside fn
+
+    if shape.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: model.empty_caches(shape.global_batch, shape.seq_len))
+        csh = sharding.tree_shardings(mesh, model.cache_axes(), rules, cache_shapes)
+        bsh = _batch_shardings(model, shape, mesh, rules, specs)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len, ctx)
+
+        jfn = jax.jit(prefill_fn, in_shardings=(psh, bsh),
+                      out_shardings=(None, csh))
+        return jfn, (p_shapes, specs), None, None
+
+    # decode: one serve step (new token given a seq_len KV cache)
+    cache_shapes = jax.eval_shape(
+        lambda: model.empty_caches(shape.global_batch, shape.seq_len))
+    csh = sharding.tree_shardings(mesh, model.cache_axes(), rules, cache_shapes)
+    in_specs = {"caches": cache_shapes,
+                "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}
+
+    from repro.models.model import sharded_greedy
+
+    def serve_step(params, caches, token, pos):
+        logits, new_caches = model.decode_step(params, caches, token, pos, ctx)
+        nxt = sharded_greedy(logits, ctx)[:, None]
+        return nxt, new_caches
+
+    jfn = jax.jit(serve_step,
+                  in_shardings=(psh, csh, None, None),
+                  out_shardings=(None, csh),
+                  donate_argnums=(1,))
+    return jfn, (p_shapes, in_specs["caches"], in_specs["token"],
+                 in_specs["pos"]), None, None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "auto") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False,
+           "profile": profile}
+    runnable, why = cell_is_runnable(arch, shape_name)
+    if not runnable:
+        rec["skipped"] = why
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        if profile == "auto":
+            profile = "long_context" if shape_name == "long_500k" else "default"
+            rec["profile"] = profile
+        rules = sharding.make_rules(profile)
+        model = build_model(cfg)
+        t0 = time.perf_counter()
+        fn, ex, _, _ = build_step(model, shape, mesh, rules)
+        lowered = fn.lower(*ex)
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["temp_bytes_per_dev"] = int(ma.temp_size_in_bytes)
+        rec["arg_bytes_per_dev"] = int(ma.argument_size_in_bytes)
+        rec["out_bytes_per_dev"] = int(ma.output_size_in_bytes)
+        ca = compiled.cost_analysis() or {}
+        rec["hlo_flops_raw"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+
+        coll = parse_collectives(compiled.as_text(), chips)
+        rec["collectives_by_op"] = {k: int(v) for k, v in coll["by_op"].items()}
+        rec["collective_per_chip_bytes"] = int(coll["per_chip_bytes"])
+
+        terms = roofline_terms(cfg, shape, chips, coll["per_chip_bytes"],
+                               rec["hlo_flops_raw"])
+        rec["roofline"] = terms.as_dict()
+        rec["ok"] = True
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--profile", default="auto",
+                    choices=["auto", "default", "decode", "long_context"],
+                    help="sharding rules profile (perf iterations)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok") or r.get("skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape_name, mp, profile=args.profile)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                if rec.get("skipped"):
+                    n_skip += 1
+                    print(f"SKIP {key}: {rec['skipped']}", flush=True)
+                elif rec["ok"]:
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"OK   {key}: compile={rec['compile_s']}s "
+                          f"temp={rec['temp_bytes_per_dev']/2**30:.1f}GiB "
+                          f"terms(c/m/n)={r['compute_s']:.3e}/{r['memory_s']:.3e}/"
+                          f"{r['collective_s']:.3e} dom={r['dominant']}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"FAIL {key}: {rec['error']}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

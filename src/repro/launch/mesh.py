@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+NOTE: importing this module never touches jax device state; meshes are built
+only when the functions are called (after the launcher has set XLA_FLAGS).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh.
+
+    Axes: (data, model) single-pod; (pod, data, model) multi-pod — the pod
+    axis folds into data parallelism (see repro.sharding.physical_axis).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(axis: str = "data"):
+    """1-D mesh over all local devices (tests / CPU benches / mining)."""
+    return jax.make_mesh((len(jax.devices()),), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,5 @@
+"""Model zoo: GQA transformer, MoE, Mamba2/SSD, hybrid, enc-dec."""
+
+from .model import Model, ShardCtx, NULL_CTX, build_model
+
+__all__ = ["Model", "ShardCtx", "NULL_CTX", "build_model"]

@@ -1,0 +1,179 @@
+"""Encoder–decoder backbone (whisper-small).
+
+The audio frontend (log-mel + convs) is a STUB: the encoder consumes
+precomputed frame embeddings (B, enc_seq, d_model) from ``input_specs``.
+Positions are learned-absolute (``use_rope=False`` in the config).
+Decoder layers: causal self-attention + cross-attention over encoder output
++ MLP.  Cross K/V are computed once at prefill and cached.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (attention_apply, attention_decode, attention_init,
+                     dense_init, embed_init, embed_lookup, mlp_apply,
+                     mlp_init, pdtype, rmsnorm, rmsnorm_init)
+from .transformer import decoder_logits
+
+
+def encdec_init(key, cfg):
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embed_init(ks[0], cfg)
+    params["dec_pos"] = jnp.zeros((cfg.max_seq_len, cfg.d_model), pdtype(cfg))
+    axes["dec_pos"] = (None, "embed")
+    params["enc_pos"] = jnp.zeros((cfg.enc_seq, cfg.d_model), pdtype(cfg))
+    axes["enc_pos"] = (None, "embed")
+    if not cfg.tie_embeddings:
+        params["out_head"], axes["out_head"] = dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), dtype=pdtype(cfg))
+    params["enc_final_norm"], axes["enc_final_norm"] = rmsnorm_init(cfg)
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg)
+
+    def enc_block_init(k):
+        k1, k2 = jax.random.split(k)
+        p, a = {}, {}
+        p["norm1"], a["norm1"] = rmsnorm_init(cfg)
+        p["attn"], a["attn"] = attention_init(k1, cfg)
+        p["norm2"], a["norm2"] = rmsnorm_init(cfg)
+        p["mlp"], a["mlp"] = mlp_init(k2, cfg)
+        return p, a
+
+    def dec_block_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p, a = {}, {}
+        p["norm1"], a["norm1"] = rmsnorm_init(cfg)
+        p["attn"], a["attn"] = attention_init(k1, cfg)
+        p["norm_x"], a["norm_x"] = rmsnorm_init(cfg)
+        p["cross"], a["cross"] = attention_init(k2, cfg, cross=True)
+        p["norm2"], a["norm2"] = rmsnorm_init(cfg)
+        p["mlp"], a["mlp"] = mlp_init(k3, cfg)
+        return p, a
+
+    def stack(k, n, initfn):
+        keys = jax.random.split(k, n)
+        stacked = jax.vmap(lambda kk: initfn(kk)[0])(keys)
+        _, a = initfn(k)
+        a = jax.tree.map(lambda t: ("layers",) + t, a,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return stacked, a
+
+    params["enc_blocks"], axes["enc_blocks"] = stack(
+        ks[2], cfg.n_encoder_layers, enc_block_init)
+    params["dec_blocks"], axes["dec_blocks"] = stack(
+        ks[3], cfg.n_layers, dec_block_init)
+    return params, axes
+
+
+def encode(params, frame_embeds, cfg, ctx):
+    """frame_embeds: (B, enc_seq, D) → encoder output (B, enc_seq, D)."""
+    x = frame_embeds.astype(pdtype(cfg)) + params["enc_pos"][None]
+    if ctx is not None:
+        x = ctx.constrain(x, ("batch", "act_seq", None))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def block(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, _ = attention_apply(p["attn"], h, cfg, ctx, positions,
+                                 causal=False, rope=False)
+        x = x + out
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+        if ctx is not None:
+            x = ctx.constrain(x, ("batch", "act_seq", None))
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, params["enc_blocks"])
+    return rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, tokens, enc_out, cfg, ctx,
+                 return_caches: bool = False, cache_len: int | None = None):
+    """Teacher-forced decoder pass. Returns final hidden (B, S, D) [+caches]."""
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens) + params["dec_pos"][None, :S]
+    if ctx is not None:
+        x = ctx.constrain(x, ("batch", "act_seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1])[None, :], (B, enc_out.shape[1]))
+
+    def block(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, (k, v) = attention_apply(p["attn"], h, cfg, ctx, positions,
+                                      causal=True, rope=False)
+        x = x + out
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out, (ck, cv) = attention_apply(p["cross"], hx, cfg, ctx, positions,
+                                        causal=False, kv_x=enc_out,
+                                        kv_positions=enc_positions, rope=False)
+        x = x + out
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+        if ctx is not None:
+            x = ctx.constrain(x, ("batch", "act_seq", None))
+        caches = {"k": k, "v": v, "cross_k": ck, "cross_v": cv} if return_caches else {}
+        return x, caches
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, caches = jax.lax.scan(blk, x, params["dec_blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if not return_caches:
+        return x
+    cache_len = cache_len or S
+    pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    caches = {"k": jnp.pad(caches["k"], pad), "v": jnp.pad(caches["v"], pad),
+              "cross_k": caches["cross_k"], "cross_v": caches["cross_v"]}
+    return x, caches
+
+
+def encdec_decode_step(params, caches, token, pos, cfg, ctx):
+    """token: (B,1); pos: (B,). caches: dict with k/v (L,B,Smax,H,hd) and
+    cross_k/cross_v (L,B,enc_seq,H,hd).  Returns (logits (B,Vp), new caches)."""
+    x = embed_lookup(params["embed"], token) + params["dec_pos"][pos][:, None, :]
+
+    def block(x, inp):
+        p, ck, cv, xk, xv = inp
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, nk, nv = attention_decode(p["attn"], h, cfg, ctx, ck, cv, pos)
+        x = x + out
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        # cross attention over fixed encoder K/V (no update, no causal mask)
+        B = x.shape[0]
+        q = jnp.einsum("bsd,dhk->bshk", hx, p["cross"]["wq"])[:, 0]
+        s = jnp.einsum("bhd,bthd->bht", q, xk).astype(jnp.float32)
+        s = s / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bht,bthd->bhd", w, xv.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bhk,hkd->bd", o, p["cross"]["wo"])[:, None, :]
+        x = x + out
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(
+        block, x, (params["dec_blocks"], caches["k"], caches["v"],
+                   caches["cross_k"], caches["cross_v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = decoder_logits(params, x, cfg, ctx)[:, 0, :]
+    new_caches = dict(caches, k=nks, v=nvs)
+    return logits, new_caches
+
+
+def encdec_empty_caches(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def encdec_cache_axes(cfg):
+    kv = ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv,
+            "cross_k": ("layers", "cache_batch", None, "kv_heads", "head_dim"),
+            "cross_v": ("layers", "cache_batch", None, "kv_heads", "head_dim")}

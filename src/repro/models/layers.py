@@ -1,0 +1,301 @@
+"""Foundational model layers: init helpers, RMSNorm, RoPE, GQA attention
+(chunked flash-style for train/prefill, cache-based for decode), SwiGLU MLP.
+
+Conventions
+-----------
+* Every ``*_init(key, cfg)`` returns ``(params, axes)`` — two trees of the
+  same structure; ``axes`` leaves are tuples of logical axis names consumed by
+  :mod:`repro.sharding`.
+* Params are stored in ``cfg.dtype`` (bf16 by default); norms, softmax and
+  attention accumulation run in f32.
+* ``ctx`` is a ShardCtx (see model.py) used to place sharding constraints on
+  key activations; it is a no-op in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, axes, scale: float | None = None, dtype=jnp.bfloat16):
+    """Normal(0, scale) init; default scale = 1/sqrt(fan_in)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype), axes
+
+
+# -- norm ---------------------------------------------------------------------
+
+def rmsnorm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return {"scale": jnp.ones((d,), pdtype(cfg))}, {"scale": (None,)}
+
+
+def rmsnorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float):
+    """Per-head qk-norm over the head_dim axis."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary -------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ------------------------------------------------------------------
+
+def head_mask(cfg) -> jnp.ndarray:
+    """(padded_heads,) f32 mask: 1 for real q heads, 0 for group padding.
+
+    Padded q-head layout is (kv_head, group) flattened, so real heads are the
+    first ``group_size`` of each ``padded_group_size`` group — GQA head→kv
+    mapping is preserved exactly for real heads.
+    """
+    g = jnp.arange(cfg.padded_heads) % cfg.padded_group_size
+    return (g < cfg.group_size).astype(jnp.float32)
+
+
+def attention_init(key, cfg, cross: bool = False):
+    d, hkv = cfg.d_model, cfg.n_kv_heads
+    hq = cfg.padded_heads
+    hd = cfg.resolved_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["wq"], axes["wq"] = dense_init(ks[0], (d, hq, hd), ("embed", "q_heads", "head_dim"), dtype=dt)
+    params["wk"], axes["wk"] = dense_init(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dt)
+    params["wv"], axes["wv"] = dense_init(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dt)
+    params["wo"], axes["wo"] = dense_init(ks[3], (hq, hd, d), ("q_heads", "head_dim", "embed"),
+                                          scale=1.0 / np.sqrt(hq * hd), dtype=dt)
+    if cfg.qk_norm and not cross:
+        params["q_norm"] = jnp.ones((hd,), dt)
+        params["k_norm"] = jnp.ones((hd,), dt)
+        axes["q_norm"] = ("head_dim",)
+        axes["k_norm"] = ("head_dim",)
+    return params, axes
+
+
+def _qkv(p, x, kv_x, cfg, positions, kv_positions, rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    if cfg.padded_heads != cfg.n_heads:
+        q = q * head_mask(cfg)[None, None, :, None].astype(q.dtype)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, n_kv_heads: int, causal: bool,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      q_offset=0, ctx=None) -> jax.Array:
+    """Flash-style streaming-softmax attention in pure jnp.
+
+    q: (B, S, Hq, hd); k, v: (B, T, Hkv, hd).  Memory is O(q_chunk × kv_chunk)
+    per step instead of O(S × T); the double lax.scan keeps the HLO compact for
+    very long sequences.  Causal masking uses absolute positions
+    (q position = q_offset + index), so prefill-with-history works.
+
+    Each q-chunk is wrapped in ``jax.checkpoint``: the backward pass re-streams
+    the KV scan per chunk instead of saving every (qc × kc) probability tile —
+    the flash-attention memory property, expressed at the JAX level.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    G = Hq // n_kv_heads
+    scale = 1.0 / np.sqrt(hd)
+
+    # GQA: broadcast KV to flat q-heads.  Keeping the head axis FLAT (no
+    # (Hkv, G) reshape) is what lets GSPMD keep heads sharded on the model
+    # axis — a (48,)→(8,6) reshape of a 16-way-sharded axis forces
+    # replication.  The repeated KV is sharded like q, so the per-device
+    # footprint is (T × Hq/shards × hd), not ×G of the original.
+    head_to_kv = jnp.arange(Hq) // G
+    k = jnp.take(k, head_to_kv, axis=2)   # (B, T, Hq, hd)
+    v = jnp.take(v, head_to_kv, axis=2)
+    if ctx is not None:
+        # Megatron-SP boundary: residuals are sequence-sharded on `model`;
+        # attention itself is head-sharded.  These constraints make GSPMD
+        # all-gather the sequence HERE and shard heads, instead of running
+        # the whole attention replicated.
+        hax = ("batch", None, "q_heads", None)
+        q = ctx.constrain(q, hax)
+        k = ctx.constrain(k, hax)
+        v = ctx.constrain(v, hax)
+
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+    kc = min(kv_chunk, T)
+    while T % kc:
+        kc -= 1
+
+    qr = q.reshape(B, S // qc, qc, Hq, hd)
+    kr = k.reshape(B, T // kc, kc, Hq, hd)
+    vr = v.reshape(B, T // kc, kc, Hq, hd)
+
+    q_pos = q_offset + jnp.arange(S).reshape(S // qc, qc)
+    k_pos = jnp.arange(T).reshape(T // kc, kc)
+
+    def per_q_chunk(args):
+        qck, qp = args  # (B, qc, Hq, hd), (qc,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kck, vck, kp = inp  # (B, kc, Hq, hd), (B, kc, Hq, hd), (kc,)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qck, kck).astype(jnp.float32) * scale
+            if causal:
+                mask = qp[:, None] >= kp[None, :]  # (qc, kc)
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard: fully-masked rows have m == -inf
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p_ = jnp.exp(s - m_safe[..., None])
+            if causal:
+                p_ = jnp.where(mask[None, None], p_, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+            l_new = l * corr + p_.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p_, vck.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hq, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hq, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, Hq, qc, hd)
+        return out.transpose(0, 2, 1, 3)               # (B, qc, Hq, hd)
+
+    outs = jax.lax.map(jax.checkpoint(per_q_chunk),
+                       (qr.transpose(1, 0, 2, 3, 4), q_pos))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, hd)
+    out = out.astype(q.dtype)
+    if ctx is not None:
+        out = ctx.constrain(out, ("batch", None, "q_heads", None))
+    return out
+
+
+def attention_apply(p, x, cfg, ctx, positions, causal: bool = True,
+                    kv_x=None, kv_positions=None, rope: bool = True):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out (B,S,D), (k, v)) — k/v returned for cache construction.
+    """
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _qkv(p, x, kv_x, cfg, positions, kv_positions, rope=rope)
+    o = chunked_attention(q, k, v, cfg.n_kv_heads, causal=causal,
+                          q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+                          ctx=ctx)
+    if cfg.padded_heads != cfg.n_heads:
+        o = o * head_mask(cfg)[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def attention_decode(p, x, cfg, ctx, cache_k, cache_v, pos):
+    """Single-token decode. x: (B, 1, D); cache_{k,v}: (B, Smax, Hkv, hd);
+    pos: (B,) int32 — per-request current position (continuous batching).
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    positions = pos[:, None]
+    q, k, v = _qkv(p, x, x, cfg, positions, positions, rope=True)
+    b_idx = jnp.arange(B)
+    cache_k = cache_k.at[b_idx, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b_idx, pos].set(v[:, 0].astype(cache_v.dtype))
+    if ctx is not None:
+        cache_k = ctx.constrain(cache_k, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+        cache_v = ctx.constrain(cache_v, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+    Hq = cfg.padded_heads
+    Hkv = cfg.n_kv_heads
+    G = Hq // Hkv
+    hd = q.shape[-1]
+    # flat-head GQA (see chunked_attention): broadcast cached KV to q heads
+    head_to_kv = jnp.arange(Hq) // G
+    ck = jnp.take(cache_k, head_to_kv, axis=2)                # (B, T, Hq, hd)
+    cv = jnp.take(cache_v, head_to_kv, axis=2)
+    if ctx is not None:
+        hax = ("cache_batch", "kv_seq", "q_heads", None)
+        ck = ctx.constrain(ck, hax)
+        cv = ctx.constrain(cv, hax)
+    qf = q[:, 0]                                              # (B, Hq, hd)
+    if ctx is not None:
+        qf = ctx.constrain(qf, ("cache_batch", "q_heads", None))
+    s = jnp.einsum("bhd,bthd->bht", qf, ck).astype(jnp.float32) / np.sqrt(hd)
+    t_idx = jnp.arange(cache_k.shape[1])
+    valid = t_idx[None, :] <= pos[:, None]                    # (B, T)
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bthd->bhd", w, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, Hq, hd).astype(x.dtype)
+    if Hq != cfg.n_heads:
+        o = o * head_mask(cfg)[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache_k, cache_v
+
+
+# -- MLP -----------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    params["w_gate"], axes["w_gate"] = dense_init(ks[0], (d, f), ("embed", "mlp"), dtype=dt)
+    params["w_up"], axes["w_up"] = dense_init(ks[1], (d, f), ("embed", "mlp"), dtype=dt)
+    params["w_down"], axes["w_down"] = dense_init(ks[2], (f, d), ("mlp", "embed"), dtype=dt)
+    return params, axes
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# -- embedding -------------------------------------------------------------------
+
+def embed_init(key, cfg):
+    dt = pdtype(cfg)
+    tbl, ax = dense_init(key, (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                         scale=0.02, dtype=dt)
+    return {"table": tbl}, {"table": ax}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)

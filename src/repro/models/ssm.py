@@ -1,0 +1,236 @@
+"""Mamba-2 mixer via SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks (MXU-friendly batched matmuls) plus a linear
+inter-chunk state scan.  Decode is the O(1)-state recurrence.  A naive
+step-by-step recurrence (``ssd_reference``) is kept as the test oracle.
+
+Shapes (per block): d_inner = expand·d_model; P = ssm_head_dim;
+H = d_inner / P heads; N = ssm_state.  n_groups = 1 (B/C shared across heads).
+
+All state-decay exponentials are of non-positive arguments (A < 0, dt > 0),
+so the chunked form is overflow-safe by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, pdtype, rmsnorm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    params, axes = {}, {}
+    params["w_z"], axes["w_z"] = dense_init(ks[0], (d, d_inner), ("embed", "mlp"), dtype=dt)
+    params["w_x"], axes["w_x"] = dense_init(ks[1], (d, d_inner), ("embed", "mlp"), dtype=dt)
+    params["w_B"], axes["w_B"] = dense_init(ks[2], (d, N), ("embed", "ssm_state"), dtype=dt)
+    params["w_C"], axes["w_C"] = dense_init(ks[3], (d, N), ("embed", "ssm_state"), dtype=dt)
+    params["w_dt"], axes["w_dt"] = dense_init(ks[4], (d, H), ("embed", "ssm_heads"), dtype=dt)
+    # dt bias: softplus(dt_bias) ∈ [1e-3, 1e-1]
+    u = jax.random.uniform(ks[5], (H,), jnp.float32,
+                           np.log(1e-3), np.log(1e-1))
+    params["dt_bias"] = jnp.log(jnp.expm1(jnp.exp(u)))
+    axes["dt_bias"] = ("ssm_heads",)
+    params["A_log"] = jnp.log(jax.random.uniform(ks[6], (H,), jnp.float32, 1.0, 16.0))
+    axes["A_log"] = ("ssm_heads",)
+    params["D_skip"] = jnp.ones((H,), jnp.float32)
+    axes["D_skip"] = ("ssm_heads",)
+    params["conv_x"], axes["conv_x"] = dense_init(
+        ks[7], (K, d_inner), ("conv", "mlp"), scale=1.0 / np.sqrt(K), dtype=dt)
+    params["conv_B"], axes["conv_B"] = dense_init(
+        ks[8], (K, N), ("conv", "ssm_state"), scale=1.0 / np.sqrt(K), dtype=dt)
+    params["conv_C"], axes["conv_C"] = dense_init(
+        ks[9], (K, N), ("conv", "ssm_state"), scale=1.0 / np.sqrt(K), dtype=dt)
+    params["out_norm"] = jnp.ones((d_inner,), dt)
+    axes["out_norm"] = (None,)
+    params["w_out"], axes["w_out"] = dense_init(
+        jax.random.fold_in(key, 99), (d_inner, d), ("mlp", "embed"), dtype=dt)
+    return params, axes
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv. u: (B, S, C); w: (K, C) → (B, S, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + u.shape[1], :] * w[k][None, None, :] for k in range(K))
+    return out
+
+
+def _conv_step(u_t, conv_state, w):
+    """Single-step conv. u_t: (B, C); conv_state: (B, K-1, C) (oldest first)."""
+    window = jnp.concatenate([conv_state, u_t[:, None, :]], axis=1)  # (B, K, C)
+    y = (window * w[None]).sum(axis=1)
+    new_state = window[:, 1:, :]
+    return y, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D_skip, chunk: int, h0=None):
+    """Chunked SSD: ``lax.scan`` over chunks carrying the inter-chunk state.
+
+    x: (B,S,H,P) f32; dt: (B,S,H) f32; A: (H,) f32 (negative);
+    Bm, Cm: (B,S,N) f32; D_skip: (H,).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+
+    The intra-chunk quadratic work materializes only one chunk's (L, L, H)
+    decay tensor at a time, and the chunk body is checkpointed so backward
+    re-materializes per chunk instead of saving every chunk's tensors.
+    All decay exponents are ≤ 0 (A < 0, dt > 0) → overflow-safe.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+    xr = x.reshape(Bsz, nc, L, H, P).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(Bsz, nc, L, H).transpose(1, 0, 2, 3)
+    Br = Bm.reshape(Bsz, nc, L, N).transpose(1, 0, 2, 3)
+    Cr = Cm.reshape(Bsz, nc, L, N).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    @jax.checkpoint
+    def chunk_step(h_prev, inp):
+        xc, dtc, Bc, Cc = inp          # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        a = dtc * A[None, None, :]                   # (B,L,H) ≤ 0
+        cum = jnp.cumsum(a, axis=1)                  # inclusive
+        total = cum[:, -1, :]                        # (B,H)
+        # intra-chunk
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)  # (B,L,L)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # (B,i,j,H)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        M = scores[..., None] * decay * dtc[:, None, :, :]  # (B,i,j,H)
+        y = jnp.einsum("bijh,bjhp->bihp", M, xc)
+        # contribution of the carried state
+        y = y + jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum), Cc, h_prev)
+        y = y + D_skip[None, None, :, None] * xc
+        # state update
+        w_state = jnp.exp(total[:, None, :] - cum) * dtc    # (B,L,H)
+        S_c = jnp.einsum("blh,blhp,bln->bhpn", w_state, xc, Bc)
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + S_c
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D_skip):
+    """Naive per-step recurrence (test oracle). Same shapes as ssd_chunked."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t * A[None, :])[:, :, None, None]
+        inject = dt_t[:, :, None, None] * x_t[..., None] * B_t[:, None, None, :]
+        h = decay * h + inject
+        y_t = jnp.einsum("bhpn,bn->bhp", h, C_t) + D_skip[None, :, None] * x_t
+        return h, y_t
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                                    Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def _project(p, x, cfg):
+    """Shared projections for train/prefill. x: (B,S,D)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt_raw = (x @ p["w_dt"]).astype(jnp.float32)
+    return z, xs, Bm, Cm, dt_raw
+
+
+def ssm_apply(p, x, cfg, ctx, chunk: int = 256, h0=None, return_state: bool = False):
+    """Train/prefill SSD pass. x: (B,S,D) → (B,S,D) [+ (conv states, h_final)].
+
+    Layout note: SSD is sequential over chunks, so the sequence axis must NOT
+    be sharded here (unlike attention blocks, which are sequence-parallel).
+    Projections are constrained to (batch→data, seq→replicated, d_inner→model):
+    every device runs the full-sequence scan over its head slice — the natural
+    TPU layout for SSD (heads are embarrassingly parallel, chunks are not).
+    """
+    B, S, D = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    if ctx is not None:
+        x = ctx.constrain(x, ("ssm_batch", None, None))
+    z, xs, Bm, Cm, dt_raw = _project(p, x, cfg)
+    if ctx is not None:
+        z = ctx.constrain(z, ("ssm_batch", None, "mlp"))
+        xs = ctx.constrain(xs, ("ssm_batch", None, "mlp"))
+        Bm = ctx.constrain(Bm, ("ssm_batch", None, None))
+        Cm = ctx.constrain(Cm, ("ssm_batch", None, None))
+        dt_raw = ctx.constrain(dt_raw, ("ssm_batch", None, "ssm_heads"))
+    xs_c = _causal_conv(xs, p["conv_x"])
+    Bm_c = _causal_conv(Bm, p["conv_B"])
+    Cm_c = _causal_conv(Cm, p["conv_C"])
+    xs_c = jax.nn.silu(xs_c)
+    Bm_c = jax.nn.silu(Bm_c)
+    Cm_c = jax.nn.silu(Cm_c)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs_c.reshape(B, S, H, P).astype(jnp.float32)
+    y, h_final = ssd_chunked(xh, dt, A, Bm_c.astype(jnp.float32),
+                             Cm_c.astype(jnp.float32), p["D_skip"], chunk, h0=h0)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    conv_states = {
+        "x": jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))[:, S:S + K - 1, :],
+        "B": jnp.pad(Bm, ((0, 0), (K - 1, 0), (0, 0)))[:, S:S + K - 1, :],
+        "C": jnp.pad(Cm, ((0, 0), (K - 1, 0), (0, 0)))[:, S:S + K - 1, :],
+    }
+    return out, (conv_states, h_final)
+
+
+def ssm_decode(p, x, cfg, ctx, conv_states, h):
+    """Single-token decode. x: (B,1,D); conv states (B,K-1,·); h (B,H,P,N).
+
+    Returns (out (B,1,D), new conv states, new h).
+    """
+    B = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, xs, Bm, Cm, dt_raw = _project(p, x[:, 0, :], cfg)
+    xs_t, cs_x = _conv_step(xs, conv_states["x"], p["conv_x"])
+    Bm_t, cs_B = _conv_step(Bm, conv_states["B"], p["conv_B"])
+    Cm_t, cs_C = _conv_step(Cm, conv_states["C"], p["conv_C"])
+    xs_t = jax.nn.silu(xs_t)
+    Bm_t = jax.nn.silu(Bm_t).astype(jnp.float32)
+    Cm_t = jax.nn.silu(Cm_t).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, :])       # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs_t.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])[:, :, None, None]
+    inject = dt[:, :, None, None] * xh[..., None] * Bm_t[:, None, None, :]
+    h_new = decay * h + inject
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm_t) + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)[:, None, :]
+    y = rmsnorm({"scale": p["out_norm"]}, y, cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"x": cs_x, "B": cs_B, "C": cs_C}, h_new

@@ -1,0 +1,322 @@
+"""Decoder-only transformer supporting dense / MoE / SSM / hybrid layer stacks.
+
+The layer pattern (which mixer, which FFN per layer) is folded into the
+smallest repeating *period* P; layers are stacked into P parallel stacks of
+``n_layers / P`` super-blocks and executed with one ``lax.scan`` over
+super-blocks (compact HLO, O(1) compile cost in depth) with optional remat.
+Homogeneous models have P = 1; Jamba has P = 8 (7 Mamba + 1 attention,
+MoE on odd layers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (attention_apply, attention_decode, attention_init,
+                     embed_init, embed_lookup, mlp_apply, mlp_init, pdtype,
+                     rmsnorm, rmsnorm_init)
+from .moe import moe_apply, moe_apply_dense, moe_init
+from .ssm import ssm_apply, ssm_decode, ssm_init
+
+
+def pattern_period(cfg) -> int:
+    kinds = [(cfg.layer_kind(i), cfg.ffn_kind(i)) for i in range(cfg.n_layers)]
+    for p in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % p:
+            continue
+        if all(kinds[i] == kinds[i % p] for i in range(cfg.n_layers)):
+            return p
+    return cfg.n_layers
+
+
+def block_init(key, cfg, idx_in_period: int):
+    """One (mixer + ffn) block."""
+    mixer_kind = cfg.layer_kind(idx_in_period)
+    ffn_kind = cfg.ffn_kind(idx_in_period)
+    ks = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["norm1"], axes["norm1"] = rmsnorm_init(cfg)
+    if mixer_kind == "attn":
+        params["attn"], axes["attn"] = attention_init(ks[0], cfg)
+    else:
+        params["ssm"], axes["ssm"] = ssm_init(ks[0], cfg)
+    if ffn_kind != "none":
+        params["norm2"], axes["norm2"] = rmsnorm_init(cfg)
+        if ffn_kind == "moe":
+            params["moe"], axes["moe"] = moe_init(ks[1], cfg)
+        else:
+            params["mlp"], axes["mlp"] = mlp_init(ks[1], cfg)
+    return params, axes
+
+
+def block_apply(p, x, cfg, ctx, positions):
+    """Full-sequence block (train/prefill). Returns (x, cache, aux)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if ctx is not None:
+        h = ctx.constrain(h, ("batch", "act_seq", None))
+    cache = {}
+    if "attn" in p:
+        out, (k, v) = attention_apply(p["attn"], h, cfg, ctx, positions)
+        cache = {"k": k, "v": v}
+    else:
+        out, (conv_states, h_final) = ssm_apply(p["ssm"], h, cfg, ctx,
+                                                return_state=True)
+        cache = {"conv": conv_states, "state": h_final}
+    x = x + out
+    if ctx is not None:
+        x = ctx.constrain(x, ("batch", "act_seq", None))
+    aux = jnp.zeros((), jnp.float32)
+    if "norm2" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if "moe" in p:
+            ff, aux = moe_apply(p["moe"], h2, cfg, ctx)
+        else:
+            ff = mlp_apply(p["mlp"], h2)
+        x = x + ff
+        if ctx is not None:
+            x = ctx.constrain(x, ("batch", "act_seq", None))
+    return x, cache, aux
+
+
+def block_decode(p, cache, x, cfg, ctx, pos):
+    """Single-token block. Returns (x, new_cache)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if "attn" in p:
+        out, ck, cv = attention_decode(p["attn"], h, cfg, ctx,
+                                       cache["k"], cache["v"], pos)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out, conv_states, state = ssm_decode(p["ssm"], h, cfg, ctx,
+                                             cache["conv"], cache["state"])
+        new_cache = {"conv": conv_states, "state": state}
+    x = x + out
+    if "norm2" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        ff = (moe_apply_dense(p["moe"], h2, cfg, ctx)[0] if "moe" in p
+              else mlp_apply(p["mlp"], h2))
+        x = x + ff
+    return x, new_cache
+
+
+# -- model-level init ----------------------------------------------------------
+
+def decoder_init(key, cfg):
+    P = pattern_period(cfg)
+    nb = cfg.n_layers // P
+    ks = jax.random.split(key, P + 3)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embed_init(ks[0], cfg)
+    if not cfg.use_rope:
+        tbl, ax = jnp.zeros((cfg.max_seq_len, cfg.d_model), pdtype(cfg)), (None, "embed")
+        params["pos_embed"], axes["pos_embed"] = tbl, ax
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+        params["out_head"], axes["out_head"] = dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), dtype=pdtype(cfg))
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg)
+    blocks_p, blocks_a = {}, {}
+    for j in range(P):
+        keys = jax.random.split(ks[2 + j], nb)
+        stacked = jax.vmap(lambda k, j=j: block_init(k, cfg, j)[0])(keys)
+        _, a = block_init(ks[2 + j], cfg, j)
+        blocks_p[f"sub{j}"] = stacked
+        blocks_a[f"sub{j}"] = jax.tree.map(
+            lambda t: ("layers",) + t, a, is_leaf=lambda t: isinstance(t, tuple))
+    params["blocks"] = blocks_p
+    axes["blocks"] = blocks_a
+    return params, axes
+
+
+# -- full-sequence forward ------------------------------------------------------
+
+def decoder_forward(params, tokens, cfg, ctx, frontend_embeds=None,
+                    return_caches: bool = False, cache_len: int | None = None):
+    """tokens: (B, S) int32 → final hidden (B, S, D) [+ caches, aux_loss].
+
+    ``frontend_embeds``: (B, n_frontend_tokens, D) stub modality embeddings
+    overwriting the leading positions (VLM).
+    ``return_caches``: prefill mode — also return decode caches padded to
+    ``cache_len``.
+    """
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens)
+    if frontend_embeds is not None:
+        nf = min(frontend_embeds.shape[1], S)
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds[:, :nf].astype(x.dtype), (0, 0, 0))
+    if not cfg.use_rope:
+        x = x + params["pos_embed"][None, :S, :]
+    if ctx is not None:
+        x = ctx.constrain(x, ("batch", "act_seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    P = pattern_period(cfg)
+
+    def superblock(x, block_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {}
+        for j in range(P):
+            x, cache, aux = block_apply(block_params[f"sub{j}"], x, cfg, ctx,
+                                        positions)
+            if return_caches:
+                caches[f"sub{j}"] = cache
+            aux_total = aux_total + aux
+        return x, (caches, aux_total)
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            # §Perf: save matmul outputs — trades remat recompute FLOPs
+            # (~1/4 of the step) for activation memory
+            sb = jax.checkpoint(
+                superblock,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            sb = jax.checkpoint(superblock)
+    else:
+        sb = superblock
+    x, (caches, auxes) = jax.lax.scan(sb, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    aux_loss = auxes.sum()
+    if not return_caches:
+        return x, aux_loss
+
+    # Prefill: pad attention k/v to cache_len; ssm caches are final states.
+    cache_len = cache_len or S
+
+    def pad_cache(c):
+        out = {}
+        for name, sub in c.items():
+            if "k" in sub:  # attention: (nb, B, S, Hkv, hd) → (nb, B, cache_len, ...)
+                k, v = sub["k"], sub["v"]
+                pad = [(0, 0), (0, 0), (0, cache_len - k.shape[2]), (0, 0), (0, 0)]
+                out[name] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            else:
+                out[name] = sub
+        return out
+
+    return x, aux_loss, pad_cache(caches)
+
+
+def decoder_logits(params, x, cfg, ctx):
+    """Final hidden → (B,S,Vp) f32 logits with pad vocab masked to -1e30.
+
+    Only for small S (decode steps / tests); training uses ``decoder_loss``,
+    which never materializes the full logits tensor.
+    """
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["out_head"])
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.vocab_padded > cfg.vocab_size:
+        v_idx = jnp.arange(cfg.vocab_padded)
+        logits = jnp.where(v_idx < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def decoder_loss(params, x, labels, cfg, ctx, chunk: int = 512):
+    """Chunked cross-entropy over the sequence. x: (B,S,D), labels: (B,S)."""
+    B, S, D = x.shape
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["out_head"])
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    xr = x.reshape(B, S // c, c, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        # checkpointed: backward recomputes the chunk logits instead of
+        # saving (B, c, Vp) f32 per chunk across the whole scan.
+        xc, lc = inp                                   # (B,c,D), (B,c)
+        logits = (xc @ head).astype(jnp.float32)       # (B,c,Vp)
+        if ctx is not None:
+            logits = ctx.constrain(logits, ("batch", None, "vocab"))
+        if cfg.vocab_padded > cfg.vocab_size:
+            v_idx = jnp.arange(cfg.vocab_padded)
+            logits = jnp.where(v_idx[None, None, :] < cfg.vocab_size,
+                               logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xr, lr))
+    return total / (B * S)
+
+
+# -- decode ---------------------------------------------------------------------
+
+def decoder_decode_step(params, caches, token, pos, cfg, ctx):
+    """token: (B,1) int32; pos: (B,) int32; caches from prefill/empty_caches.
+
+    Returns (logits (B, vocab_padded), new_caches).
+    """
+    B = token.shape[0]
+    x = embed_lookup(params["embed"], token)
+    if not cfg.use_rope:
+        x = x + params["pos_embed"][pos][:, None, :]
+    if ctx is not None:
+        x = ctx.constrain(x, ("batch", None, None))
+    P = pattern_period(cfg)
+
+    def scan_body(x, inp):
+        block_params, cache = inp
+        new_caches = {}
+        for j in range(P):
+            x, nc = block_decode(block_params[f"sub{j}"], cache[f"sub{j}"],
+                                 x, cfg, ctx, pos)
+            new_caches[f"sub{j}"] = nc
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], caches))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = decoder_logits(params, x, cfg, ctx)[:, 0, :]
+    return logits, new_caches
+
+
+def decoder_empty_caches(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Abstract-friendly empty cache tree matching decoder_decode_step."""
+    from .ssm import ssm_dims
+    P = pattern_period(cfg)
+    nb = cfg.n_layers // P
+    hd = cfg.resolved_head_dim
+    caches = {}
+    for j in range(P):
+        if cfg.layer_kind(j) == "attn":
+            caches[f"sub{j}"] = {
+                "k": jnp.zeros((nb, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((nb, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+            }
+        else:
+            d_inner, H, Pd, N = ssm_dims(cfg)
+            K = cfg.ssm_conv
+            caches[f"sub{j}"] = {
+                "conv": {"x": jnp.zeros((nb, batch, K - 1, d_inner), dtype),
+                         "B": jnp.zeros((nb, batch, K - 1, N), dtype),
+                         "C": jnp.zeros((nb, batch, K - 1, N), dtype)},
+                "state": jnp.zeros((nb, batch, H, Pd, N), jnp.float32),
+            }
+    return caches
+
+
+def cache_axes(cfg):
+    """Logical axes tree for decode caches (mirrors decoder_empty_caches)."""
+    P = pattern_period(cfg)
+    axes = {}
+    for j in range(P):
+        if cfg.layer_kind(j) == "attn":
+            axes[f"sub{j}"] = {
+                "k": ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim"),
+                "v": ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim"),
+            }
+        else:
+            axes[f"sub{j}"] = {
+                "conv": {"x": ("layers", "cache_batch", "conv", "mlp"),
+                         "B": ("layers", "cache_batch", "conv", "ssm_state"),
+                         "C": ("layers", "cache_batch", "conv", "ssm_state")},
+                "state": ("layers", "cache_batch", "ssm_heads", None, "ssm_state"),
+            }
+    return axes

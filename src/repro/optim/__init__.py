@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, apply_updates, init_state, schedule, state_axes
+
+__all__ = ["AdamWConfig", "apply_updates", "init_state", "schedule", "state_axes"]

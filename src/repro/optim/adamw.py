@@ -1,0 +1,123 @@
+"""Sharded AdamW with global-norm clipping, cosine schedule, and an optional
+int8 gradient-compression (error-feedback) stage.
+
+Optimizer state lives in f32 and inherits the parameter sharding (params are
+already fully sharded across both mesh axes under the default rules — the
+ZeRO-3 regime — so m/v are sharded identically at 2× param bytes).
+
+Gradient compression: ``compress_grads`` quantizes gradients to int8 with a
+per-tensor scale and keeps the quantization residual in an error-feedback
+buffer (added back next step).  On a real multi-pod deployment the quantized
+tensor is what crosses the pod-interconnect all-reduce; in this single-
+controller formulation it documents/measures the numerics (tests show
+convergence is preserved) while the collective itself stays XLA-managed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compress: bool = False       # int8 gradient compression w/ error feedback
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_state(params, cfg: AdamWConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress:
+        state["err"] = jax.tree.map(f32, params)
+    return state
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, err):
+    """int8 quantize with error feedback. Returns (dequantized grads, new err)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+    flat = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    if cfg.compress:
+        grads, new_err = compress_grads(grads, state["err"])
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.compress:
+        new_state["err"] = new_err
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_axes(param_axes, cfg: AdamWConfig):
+    """Optimizer-state logical axes (mirror params; step is replicated)."""
+    out = {"m": param_axes, "v": param_axes, "step": ()}
+    if cfg.compress:
+        out["err"] = param_axes
+    return out

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, ServePhaseRecord
+
+__all__ = ["ServeEngine", "ServePhaseRecord"]

@@ -1,0 +1,184 @@
+"""Serving engine: batched KV-cache decoding with **paper-policy dispatch fusion**.
+
+The isomorphism to the paper (DESIGN.md §3):
+
+  Apriori pass              ≙ one decode step for the whole batch
+  MapReduce job overhead    ≙ host sync + dispatch + collective setup per step
+  multi-pass phase          ≙ ``lax.scan`` over npass decode steps in ONE dispatch
+  candidate count |C|       ≙ active (unfinished) requests × passes
+  pruning step              ≙ per-step in-graph EOS masking of finished rows
+  skipped pruning           ≙ fused steps emit raw tokens; finished rows keep
+                              "generating" and the phase-end host check trims them
+  un-pruned candidates      ≙ tokens emitted past EOS — wasted work that cannot
+                              corrupt output (trimmed like infrequent candidates)
+
+Seven algorithms, same Policy objects as the mining drivers: spc (1 step per
+dispatch), fpc (fixed), dpc, vfpc, etdpc and the optimized_* variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.core.policy import ALGORITHMS, PhaseStats
+from repro.models.model import Model, ShardCtx
+
+
+@dataclasses.dataclass
+class ServePhaseRecord:
+    phase_idx: int
+    npass: int
+    active_before: int
+    tokens_emitted: int
+    wasted_tokens: int          # emitted after a row's EOS (un-pruned analogue)
+    elapsed: float
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cache_len: int,
+                 algorithm: str = "optimized_vfpc", mesh=None, rules=None,
+                 policy_kwargs: dict | None = None, max_npass: int = 32,
+                 pad_id: int = 0, pipeline_depth: int = 1):
+        """``pipeline_depth > 1`` (optimized engines only): keep that many
+        fused phases in flight and read results one phase behind — the host
+        EOS check ("pruning") lags the dispatch stream, trading a few more
+        post-EOS tokens for zero host-sync bubbles between phases."""
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.mesh, self.rules = mesh, rules
+        self.ctx = ShardCtx(mesh, rules)
+        policy_cls, self.optimized = ALGORITHMS[algorithm]
+        self.algorithm = algorithm
+        self.policy = policy_cls(**(policy_kwargs or {}))
+        self.max_npass = max_npass
+        self.pad_id = pad_id
+        self.pipeline_depth = pipeline_depth if self.optimized else 1
+        self._multi = {}
+        self._prefill = jax.jit(
+            lambda p, b, lp: model.prefill(p, b, cache_len, self.ctx, last_pos=lp))
+        self.records: list[ServePhaseRecord] = []
+
+    # -- jitted phase ----------------------------------------------------------
+
+    def _multi_step(self, npass: int, masked: bool):
+        """One fused dispatch of ``npass`` greedy decode steps."""
+        key = (npass, masked)
+        if key in self._multi:
+            return self._multi[key]
+        model, ctx, pad_id = self.model, self.ctx, self.pad_id
+
+        def fn(params, caches, token, pos, eos_seen, eos_id):
+            def step(carry, _):
+                caches, token, pos, eos_seen = carry
+                logits, caches = model.decode_step(params, caches, token, pos, ctx)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if masked:  # "pruning": per-step EOS bookkeeping in-graph
+                    eos_seen = eos_seen | (token[:, 0] == eos_id)
+                    nxt = jnp.where(eos_seen, pad_id, nxt)
+                return (caches, nxt[:, None], pos + 1, eos_seen), nxt
+
+            (caches, token, pos, eos_seen), toks = jax.lax.scan(
+                step, (caches, token, pos, eos_seen), None, length=npass)
+            return caches, token, pos, eos_seen, toks  # toks: (npass, B)
+
+        self._multi[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._multi[key]
+
+    # -- host driver -------------------------------------------------------------
+
+    def generate(self, prompts: np.ndarray, prompt_lens: np.ndarray | None = None,
+                 max_new_tokens: int = 64, eos_id: int = -1,
+                 extra_batch: dict | None = None):
+        """Greedy-generate for a right-padded prompt batch.
+
+        Returns (tokens (B, max_new_tokens) with pad after EOS, records).
+        """
+        B, S = prompts.shape
+        if prompt_lens is None:
+            prompt_lens = np.full((B,), S, np.int32)
+        last_pos = jnp.asarray(prompt_lens - 1, jnp.int32)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_batch:
+            batch.update(extra_batch)
+
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, batch, last_pos)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        prefill_time = time.perf_counter() - t0
+
+        out = np.full((B, max_new_tokens), self.pad_id, np.int32)
+        out[:, 0] = np.asarray(first)
+        eos_seen_host = (out[:, 0] == eos_id)
+        produced = 1
+        token = first[:, None]
+        pos = jnp.asarray(prompt_lens, jnp.int32)
+        eos_seen = jnp.asarray(eos_seen_host)
+        history: list[PhaseStats] = []
+        self.records = []
+        phase_idx = 0
+        history.append(PhaseStats(B, B, prefill_time))
+
+        inflight: list = []   # (phase_idx, npass, active, toks_dev, t_issue)
+        scheduled = produced  # positions dispatched (≥ produced when pipelining)
+
+        def drain_one():
+            nonlocal produced, phase_idx
+            pidx, npass, active, toks_dev, t_issue = inflight.pop(0)
+            toks = np.array(jax.device_get(toks_dev)).T  # (B, npass), writable
+            elapsed = time.perf_counter() - t_issue
+            # phase-end "support filter": trim tokens emitted after EOS
+            wasted = 0
+            for b in range(B):
+                for j in range(npass):
+                    if eos_seen_host[b]:
+                        wasted += int(toks[b, j] != self.pad_id)
+                        toks[b, j] = self.pad_id
+                    elif toks[b, j] == eos_id:
+                        out[b, produced + j] = toks[b, j]
+                        eos_seen_host[b] = True
+                    else:
+                        out[b, produced + j] = toks[b, j]
+            produced += npass
+            history.append(PhaseStats(npass * active, active, elapsed))
+            self.records.append(ServePhaseRecord(
+                pidx, npass, active, npass * active, wasted, elapsed))
+
+        while scheduled < max_new_tokens and not eos_seen_host.all():
+            prev = history[-1] if history else None
+            prev2 = history[-2] if len(history) > 1 else None
+            mode, val = self.policy.decide(prev, prev2)
+            active = int((~eos_seen_host).sum())
+            if mode == "width":
+                npass = int(val)
+            else:  # budget: passes while cumulative candidates ≤ α·active
+                npass = int(np.floor(val)) + 1
+            npass = max(1, min(npass, self.max_npass, max_new_tokens - scheduled))
+
+            fn = self._multi_step(npass, masked=not self.optimized)
+            t0 = time.perf_counter()
+            caches, token, pos, eos_seen, toks = fn(
+                self.params, caches, token, pos, eos_seen,
+                jnp.int32(eos_id))
+            scheduled += npass
+            inflight.append((phase_idx, npass, active, toks, t0))
+            phase_idx += 1
+            # pipelining: keep up to `pipeline_depth` phases in flight; the
+            # EOS check lags behind the dispatch stream
+            while len(inflight) >= self.pipeline_depth:
+                drain_one()
+                eos_seen = jnp.asarray(eos_seen_host)
+        while inflight:
+            drain_one()
+
+        return out, self.records
+
+    @property
+    def dispatches(self) -> int:
+        return len(self.records)

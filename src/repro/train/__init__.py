@@ -1,0 +1,7 @@
+from .loop import TrainLoop, init_train_state, make_train_step
+from .checkpoint import save_checkpoint, load_checkpoint, all_steps
+from .elastic import reshard_state, restore_elastic
+
+__all__ = ["TrainLoop", "init_train_state", "make_train_step",
+           "save_checkpoint", "load_checkpoint", "all_steps",
+           "reshard_state", "restore_elastic"]

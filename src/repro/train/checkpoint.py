@@ -1,0 +1,100 @@
+"""Topology-free checkpointing.
+
+A checkpoint is a directory of raw little-endian leaf buffers plus a JSON
+manifest (tree paths, shapes, dtypes, step).  Writes are atomic (tmp dir +
+rename) so a crash mid-save never corrupts the latest checkpoint; restarts
+resume from the newest complete step directory.  Checkpoints store full
+(host-gathered) arrays and carry no mesh information — restore re-shards onto
+whatever mesh the new job runs (see elastic.py), which is what makes
+elastic scaling work.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+import ml_dtypes  # ships with jax
+
+
+def _leaf_path(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Save a pytree. Returns the step directory path."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (kp, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.bin"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(arr.tobytes())
+        manifest["leaves"].append({
+            "path": _leaf_path(kp), "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # retention
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def load_checkpoint(ckpt_dir: str, step: int | None = None, template=None):
+    """Load a checkpoint as a pytree of numpy arrays.
+
+    ``template``: a pytree with the same structure (e.g. from
+    ``jax.eval_shape``) used to rebuild the tree; required.
+    Returns (tree, step).
+    """
+    steps = all_steps(ckpt_dir)
+    if not steps:
+        return None, None
+    step = step if step is not None else steps[-1]
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = []
+    for entry in manifest["leaves"]:
+        dtype = np.dtype(entry["dtype"]) if entry["dtype"] != "bfloat16" \
+            else np.dtype(ml_dtypes.bfloat16)
+        with open(os.path.join(d, entry["file"]), "rb") as f:
+            arr = np.frombuffer(f.read(), dtype=dtype).reshape(entry["shape"])
+        leaves.append(arr)
+    if template is None:
+        raise ValueError("template tree required to restore structure")
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,34 @@
+"""Elastic scaling: checkpoints are topology-free, so a job can restart on a
+different mesh (more/fewer data-parallel replicas, different pod count) by
+re-sharding the restored state onto the new mesh.
+
+``reshard_state`` is the single primitive: numpy tree + new mesh + logical
+axes → device tree under the new topology.  Scale-down and scale-up are both
+just restore-with-new-mesh; tests exercise 4→2→4 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import sharding
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt_lib
+
+
+def reshard_state(tree, model, opt_cfg, mesh, rules):
+    """Place a host-side {params, opt} tree onto ``mesh`` per logical rules."""
+    from repro.train.loop import state_shardings
+    sh = state_shardings(model, opt_cfg, mesh, rules)
+    return jax.device_put(tree, sh)
+
+
+def restore_elastic(ckpt_dir, model, opt_cfg, mesh, rules, template):
+    """Load newest checkpoint and re-shard it onto (a possibly different) mesh.
+
+    Returns (state, step) or (None, None) when no checkpoint exists.
+    """
+    tree, step = ckpt_lib.load_checkpoint(ckpt_dir, template=template)
+    if tree is None:
+        return None, None
+    return reshard_state(tree, model, opt_cfg, mesh, rules), step

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests see ONE device; the dry-run (and only it) forces 512 (assignment rule)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,81 @@
+"""Candidate generation vs brute-force set semantics (property-based)."""
+
+from itertools import combinations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitset import pack_itemsets, unpack_itemsets
+from repro.core.candidates import apriori_gen, join, non_apriori_gen, prune
+
+N_ITEMS = 40
+
+
+def brute_join(prev_sets, k_prev):
+    """Classic F_{k-1}×F_{k-1} join on sorted tuples."""
+    prev = sorted(prev_sets)
+    out = set()
+    for i in range(len(prev)):
+        for j in range(i + 1, len(prev)):
+            a, b = prev[i], prev[j]
+            if a[:-1] == b[:-1] and a[-1] != b[-1]:
+                out.add(tuple(sorted(set(a) | set(b))))
+    return out
+
+
+def brute_prune(cands, prev_sets, k_prev):
+    prev = set(prev_sets)
+    return {c for c in cands
+            if all(sub in prev for sub in combinations(c, k_prev))}
+
+
+def ksets(k):
+    return st.lists(
+        st.lists(st.integers(0, N_ITEMS - 1), min_size=k, max_size=k,
+                 unique=True).map(lambda x: tuple(sorted(x))),
+        min_size=0, max_size=25, unique=True)
+
+
+@given(ksets(3))
+@settings(max_examples=40, deadline=None)
+def test_join_matches_bruteforce(prev):
+    masks = pack_itemsets([list(t) for t in prev], N_ITEMS)
+    got = set(unpack_itemsets(join(masks, 3)))
+    assert got == brute_join(prev, 3)
+
+
+@given(ksets(2))
+@settings(max_examples=40, deadline=None)
+def test_apriori_gen_matches_bruteforce(prev):
+    masks = pack_itemsets([list(t) for t in prev], N_ITEMS)
+    got = set(unpack_itemsets(apriori_gen(masks, 2)))
+    want = brute_prune(brute_join(prev, 2), prev, 2)
+    assert got == want
+
+
+@given(ksets(3))
+@settings(max_examples=40, deadline=None)
+def test_non_apriori_gen_superset(prev):
+    """join-only output ⊇ join+prune output (the skipped-pruning invariant)."""
+    masks = pack_itemsets([list(t) for t in prev], N_ITEMS)
+    unpruned = set(unpack_itemsets(non_apriori_gen(masks, 3)))
+    pruned = set(unpack_itemsets(apriori_gen(masks, 3)))
+    assert pruned <= unpruned
+
+
+def test_join_blocked_consistency():
+    """Blocked evaluation must be independent of block size."""
+    rng = np.random.default_rng(0)
+    sets = {tuple(sorted(rng.choice(N_ITEMS, 4, replace=False))) for _ in range(300)}
+    masks = pack_itemsets([list(t) for t in sets], N_ITEMS)
+    a = set(unpack_itemsets(join(masks, 4, block=7)))
+    b = set(unpack_itemsets(join(masks, 4, block=1024)))
+    assert a == b
+
+
+def test_prune_keeps_frequent_closure():
+    prev = [(0, 1), (0, 2), (1, 2), (3, 4)]
+    masks = pack_itemsets([list(t) for t in prev], N_ITEMS)
+    c = join(masks, 2)
+    kept = set(unpack_itemsets(prune(c, masks, 2)))
+    assert kept == {(0, 1, 2)}

@@ -1,0 +1,74 @@
+"""Data substrate: generator signatures, loader roundtrip, shard balancing,
+token pipeline determinism."""
+
+import numpy as np
+
+from repro.data import (chess_like, dataset_by_name, dataset_stats,
+                        ibm_generator, load_transactions, mushroom_like,
+                        save_transactions)
+from repro.data.loader import balance_shards
+from repro.data.tokens import TokenPipeline
+
+
+def test_ibm_generator_signature():
+    txns = ibm_generator(n_txns=500, n_items=100, avg_width=12, seed=1)
+    stats = dataset_stats(txns, 100)
+    assert stats["n_txns"] == 500
+    assert 8 <= stats["avg_width"] <= 16
+    assert all(all(0 <= i < 100 for i in t) for t in txns)
+
+
+def test_chess_like_signature():
+    txns, n_items = chess_like(n_txns=300)
+    assert n_items == 75
+    assert all(len(t) == 37 for t in txns)          # fixed width, like chess
+
+
+def test_mushroom_like_signature():
+    txns, n_items = mushroom_like(n_txns=300)
+    assert n_items == 119
+    assert all(len(t) == 23 for t in txns)
+
+
+def test_dataset_by_name_scales():
+    txns, n_items = dataset_by_name("c20d10k", scale=0.05)
+    assert len(txns) == 500 and n_items == 192
+
+
+def test_loader_roundtrip(tmp_path):
+    txns, n_items = mushroom_like(n_txns=50)
+    p = str(tmp_path / "t.txt")
+    save_transactions(p, txns)
+    loaded, n2 = load_transactions(p)
+    assert loaded == [list(t) for t in txns]
+    assert n2 <= n_items
+
+
+def test_balance_shards_by_width():
+    rng = np.random.default_rng(0)
+    txns = [list(range(rng.integers(1, 40))) for _ in range(200)]
+    n_shards = 8
+    balanced = balance_shards(txns, n_shards)
+    loads = np.zeros(n_shards)
+    for i, t in enumerate(balanced):
+        loads[i % n_shards] += len(t)
+    assert loads.max() / loads.min() < 1.25          # LPT keeps shards even
+    assert sorted(map(tuple, balanced)) == sorted(map(tuple, txns))
+
+
+def test_token_pipeline_shapes_and_determinism():
+    p1 = TokenPipeline(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    p2 = TokenPipeline(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    t1, l1 = p1.next_batch()
+    t2, l2 = p2.next_batch()
+    assert t1.shape == (4, 16) and (t1 == t2).all() and (l1 == l2).all()
+    assert (t1[:, 1:] == l1[:, :-1]).all()          # labels are next tokens
+
+
+def test_token_pipeline_sharding():
+    full = TokenPipeline(vocab_size=1000, seq_len=8, global_batch=8, seed=3)
+    s0 = TokenPipeline(vocab_size=1000, seq_len=8, global_batch=8, seed=3,
+                       shard_index=0, shard_count=2)
+    assert s0.local_batch == 4
+    t, _ = s0.next_batch()
+    assert t.shape == (4, 8)

@@ -1,0 +1,109 @@
+"""All seven algorithm drivers vs the sequential oracle (the paper's integrity
+claim), plus checkpoint/resume and straggler handling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS, mine, sequential_apriori
+from repro.core.mapreduce import MapReduceRuntime
+
+ALGOS = sorted(ALGORITHMS)
+
+
+def _mk_txns(seed, n_items=24, n_txns=200, density=0.3):
+    rng = np.random.default_rng(seed)
+    base = rng.random((4, n_items)) < density * 1.5
+    txns = []
+    for _ in range(n_txns):
+        pat = base[rng.integers(4)]
+        row = np.where(rng.random(n_items) < 0.85, pat,
+                       rng.random(n_items) < density / 2)
+        t = np.nonzero(row)[0].tolist()
+        txns.append(t if t else [int(rng.integers(n_items))])
+    return txns
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    txns = _mk_txns(0)
+    oracle = sequential_apriori(txns, 0.25)
+    return txns, oracle
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_algorithm_matches_oracle(dataset, algo):
+    txns, oracle = dataset
+    res = mine(txns, n_items=24, min_sup=0.25, algorithm=algo)
+    mined = res.itemsets()
+    assert set(mined) == set(oracle)
+    for k in oracle:
+        assert mined[k] == oracle[k], f"level {k} differs for {algo}"
+
+
+@given(st.integers(1, 10_000), st.sampled_from(["vfpc", "optimized_vfpc",
+                                                "etdpc", "optimized_etdpc"]))
+@settings(max_examples=8, deadline=None)
+def test_property_random_datasets(seed, algo):
+    """Property: paper algorithms == oracle on random correlated datasets."""
+    txns = _mk_txns(seed, n_items=18, n_txns=120)
+    min_sup = 0.3
+    oracle = sequential_apriori(txns, min_sup)
+    res = mine(txns, n_items=18, min_sup=min_sup, algorithm=algo)
+    assert res.itemsets() == oracle
+
+
+def test_fewer_dispatches_than_spc(dataset):
+    """The whole point of the paper: combined passes → fewer jobs."""
+    txns, _ = dataset
+    n = {}
+    for algo in ["spc", "fpc", "vfpc", "optimized_vfpc"]:
+        res = mine(txns, n_items=24, min_sup=0.25, algorithm=algo)
+        n[algo] = res.dispatches
+    assert n["fpc"] < n["spc"]
+    assert n["vfpc"] <= n["spc"]
+    assert n["optimized_vfpc"] == n["vfpc"]
+
+
+def test_optimized_generates_superset_candidates(dataset):
+    txns, _ = dataset
+    plain = mine(txns, n_items=24, min_sup=0.25, algorithm="vfpc")
+    opt = mine(txns, n_items=24, min_sup=0.25, algorithm="optimized_vfpc")
+    # same frequent itemsets, but ≥ candidates in multi-pass phases
+    tot_plain = sum(sum(p.candidate_counts) for p in plain.phases)
+    tot_opt = sum(sum(p.candidate_counts) for p in opt.phases)
+    assert tot_opt >= tot_plain
+    assert opt.itemsets() == plain.itemsets()
+
+
+def test_checkpoint_resume(tmp_path, dataset):
+    txns, oracle = dataset
+    d = str(tmp_path / "ck")
+    full = mine(txns, n_items=24, min_sup=0.25, algorithm="optimized_vfpc",
+                checkpoint_dir=d)
+    # resume from the final checkpoint: must terminate immediately and agree
+    res = mine(txns, n_items=24, min_sup=0.25, algorithm="optimized_vfpc",
+               checkpoint_dir=d, resume=True)
+    assert res.itemsets() == full.itemsets()
+    assert res.n_phases <= 1  # nothing left to do after restore
+
+
+def test_checkpoint_mid_run_restart(tmp_path):
+    """Kill after Job1 (simulated via max_k), restart, same answer."""
+    txns = _mk_txns(3)
+    oracle = sequential_apriori(txns, 0.25)
+    d = str(tmp_path / "ck2")
+    partial = mine(txns, n_items=24, min_sup=0.25, algorithm="vfpc",
+                   checkpoint_dir=d, max_k=2)  # stops early, checkpointed
+    res = mine(txns, n_items=24, min_sup=0.25, algorithm="vfpc",
+               checkpoint_dir=d, resume=True)
+    assert res.itemsets() == oracle
+
+
+def test_runtime_stats_accumulate(dataset):
+    txns, _ = dataset
+    rt = MapReduceRuntime()
+    mine(txns, n_items=24, min_sup=0.25, algorithm="spc", runtime=rt)
+    assert rt.stats.dispatches >= 3
+    assert rt.stats.compiles >= 1
+    assert rt.stats.rows_counted > 0

@@ -1,0 +1,62 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps + properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitset import pack_itemsets
+from repro.kernels import support_count, support_count_ref
+from repro.kernels.support_count import support_count_pallas
+
+
+@pytest.mark.parametrize("C,T,W", [
+    (1, 1, 1), (3, 5, 1), (17, 33, 2), (64, 128, 3),
+    (256, 512, 6), (300, 700, 8), (256, 512, 1),
+])
+def test_pallas_matches_ref_shapes(C, T, W):
+    rng = np.random.default_rng(C * 1000 + T + W)
+    cands = rng.integers(0, 2**32, (C, W), dtype=np.uint32)
+    txns = rng.integers(0, 2**32, (T, W), dtype=np.uint32)
+    ref = np.asarray(support_count_ref(jnp.asarray(cands), jnp.asarray(txns)))
+    pal = np.asarray(support_count(cands, txns, impl="pallas"))
+    jn = np.asarray(support_count(cands, txns, impl="jnp"))
+    np.testing.assert_array_equal(pal, ref)
+    np.testing.assert_array_equal(jn, ref)
+
+
+@pytest.mark.parametrize("bc,bt", [(8, 16), (128, 256), (256, 512)])
+def test_pallas_block_shapes(bc, bt):
+    rng = np.random.default_rng(bc + bt)
+    C, T, W = bc * 2, bt * 3, 4
+    cands = rng.integers(0, 2**32, (C, W), dtype=np.uint32)
+    txns = rng.integers(0, 2**32, (T, W), dtype=np.uint32)
+    ref = np.asarray(support_count_ref(jnp.asarray(cands), jnp.asarray(txns)))
+    pal = np.asarray(support_count_pallas(
+        jnp.asarray(cands), jnp.asarray(txns), bc=bc, bt=bt, interpret=True))
+    np.testing.assert_array_equal(pal, ref)
+
+
+@given(st.lists(st.lists(st.integers(0, 60), min_size=0, max_size=10)
+                .map(lambda x: sorted(set(x))), min_size=1, max_size=20),
+       st.lists(st.lists(st.integers(0, 60), min_size=0, max_size=20)
+                .map(lambda x: sorted(set(x))), min_size=1, max_size=30))
+@settings(max_examples=25, deadline=None)
+def test_support_count_is_subset_count(cand_sets, txn_sets):
+    """Property: count == #transactions containing the candidate."""
+    cands = pack_itemsets(cand_sets, 61)
+    txns = pack_itemsets(txn_sets, 61)
+    got = np.asarray(support_count(cands, txns, impl="pallas"))
+    for i, cs in enumerate(cand_sets):
+        want = sum(1 for t in txn_sets if set(cs) <= set(t))
+        assert got[i] == want
+
+
+def test_zero_padding_safety():
+    """Zero txn rows never match non-empty candidates; zero candidates match all."""
+    cands = pack_itemsets([[0], []], 32)
+    txns = np.concatenate([pack_itemsets([[0], [1]], 32),
+                           np.zeros((5, 1), np.uint32)])
+    got = np.asarray(support_count(cands, txns, impl="pallas"))
+    assert got[0] == 1          # [0] ⊆ only the first txn
+    assert got[1] == 7          # empty set ⊆ everything incl. zero rows

@@ -1,0 +1,55 @@
+"""Policy decision tables — line-by-line against the paper's pseudo-code."""
+
+from repro.core.policy import (DPCPolicy, ETDPCPolicy, FPCPolicy, PhaseStats,
+                               SPCPolicy, VFPCPolicy)
+
+
+def S(c, f, e):
+    return PhaseStats(n_candidates=c, n_frequent_last=f, elapsed=e)
+
+
+def test_spc_always_one():
+    p = SPCPolicy()
+    assert p.decide(None, None) == ("width", 1)
+    assert p.decide(S(10, 5, 1.0), S(20, 9, 2.0)) == ("width", 1)
+
+
+def test_fpc_fixed():
+    p = FPCPolicy(npass=3)
+    for _ in range(4):
+        assert p.decide(S(10, 5, 1.0), None) == ("width", 3)
+
+
+def test_vfpc_paper_algorithm3():
+    """npass=2 while counts non-decreasing; +3 per decreasing phase; reset on rise."""
+    p = VFPCPolicy()
+    assert p.decide(None, None) == ("width", 2)
+    assert p.decide(S(100, 1, 1), S(50, 1, 1)) == ("width", 2)     # rising
+    assert p.decide(S(80, 1, 1), S(100, 1, 1)) == ("width", 5)     # falling: 2+3
+    assert p.decide(S(40, 1, 1), S(80, 1, 1)) == ("width", 8)      # falling: 5+3
+    assert p.decide(S(90, 1, 1), S(40, 1, 1)) == ("width", 2)      # rising: reset
+
+
+def test_dpc_alpha_from_absolute_time():
+    p = DPCPolicy(alpha_fast=2.0, beta=60.0, time_scale=1.0)
+    assert p.decide(S(1, 1, 30.0), None) == ("budget_alpha", 2.0)  # fast phase
+    assert p.decide(S(1, 1, 90.0), None) == ("budget_alpha", 1.0)  # slow phase
+
+
+def test_etdpc_paper_algorithm4():
+    p = ETDPCPolicy(beta1=40.0, beta2=60.0, time_scale=1.0)
+    # ETprev < ET branch
+    assert p.decide(S(1, 1, 30.0), S(1, 1, 10.0)) == ("budget_alpha", 3.0)  # ET<=β1
+    assert p.decide(S(1, 1, 50.0), S(1, 1, 10.0)) == ("budget_alpha", 2.0)  # β1<ET<β2
+    assert p.decide(S(1, 1, 80.0), S(1, 1, 10.0)) == ("budget_alpha", 1.0)  # ET>=β2
+    # ETprev >= ET branch
+    assert p.decide(S(1, 1, 10.0), S(1, 1, 20.0)) == ("budget_alpha", 3.0)  # ≥1.5×
+    assert p.decide(S(1, 1, 10.0), S(1, 1, 12.0)) == ("budget_alpha", 2.0)  # <1.5×
+
+
+def test_etdpc_time_scale():
+    """β thresholds rescale but relative logic is unchanged (robustness claim)."""
+    slow = ETDPCPolicy(time_scale=1.0)
+    fast = ETDPCPolicy(time_scale=1e-3)
+    assert slow.decide(S(1, 1, 30.0), S(1, 1, 10.0)) \
+        == fast.decide(S(1, 1, 30.0e-3), S(1, 1, 10.0e-3))

@@ -1,0 +1,67 @@
+"""Association-rule generation vs brute force (completes the ARM pipeline)."""
+
+from itertools import combinations
+
+import numpy as np
+import pytest
+
+from repro.core import mine, sequential_apriori
+from repro.core.rules import generate_rules
+
+
+def brute_rules(levels, n_txns, min_conf):
+    """All rules from an oracle level dict {k: {tuple: count}}."""
+    sup = {}
+    for k, d in levels.items():
+        sup.update(d)
+    out = set()
+    for itemset, cnt in sup.items():
+        if len(itemset) < 2:
+            continue
+        items = set(itemset)
+        for r in range(1, len(itemset)):
+            for cons in combinations(sorted(items), r):
+                ante = tuple(sorted(items - set(cons)))
+                if ante not in sup:
+                    continue
+                conf = cnt / sup[ante]
+                if conf + 1e-12 >= min_conf:
+                    out.add((ante, tuple(sorted(cons)), round(conf, 9)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def mined():
+    rng = np.random.default_rng(2)
+    base = rng.random((3, 16)) < 0.5
+    txns = []
+    for _ in range(150):
+        pat = base[rng.integers(3)]
+        row = np.where(rng.random(16) < 0.85, pat, rng.random(16) < 0.1)
+        txns.append(np.nonzero(row)[0].tolist() or [0])
+    res = mine(txns, n_items=16, min_sup=0.3, algorithm="optimized_vfpc")
+    oracle = sequential_apriori(txns, 0.3)
+    return res, oracle
+
+
+def test_rules_match_bruteforce(mined):
+    res, oracle = mined
+    got = {(r.antecedent, r.consequent, round(r.confidence, 9))
+           for r in generate_rules(res, min_confidence=0.7)}
+    want = brute_rules(oracle, res.n_txns, 0.7)
+    assert got == want
+    assert len(got) > 0
+
+
+def test_rules_confidence_threshold(mined):
+    res, _ = mined
+    rules = generate_rules(res, min_confidence=0.9)
+    assert all(r.confidence + 1e-12 >= 0.9 for r in rules)
+    assert rules == sorted(rules, key=lambda r: (-r.confidence, -r.lift))
+
+
+def test_rules_support_consistency(mined):
+    res, oracle = mined
+    for r in generate_rules(res, min_confidence=0.8, max_rules=20):
+        union = tuple(sorted(set(r.antecedent) | set(r.consequent)))
+        assert oracle[len(union)][union] == round(r.support * res.n_txns)
