@@ -1,7 +1,17 @@
 """Paper Figs. 2–4: execution time of all seven algorithms for varying
-minimum support on (stand-ins for) c20d10k, chess and mushroom."""
+minimum support on (stand-ins for) c20d10k, chess and mushroom.
 
-from .common import ALGOS, DATASETS, emit, load, timed_mine
+Additionally A/B-measures the device-resident phase pipeline (DESIGN.md §4):
+``before`` = the legacy synchronous/unfused loop with the pairwise join (the
+pre-pipeline tree), ``after`` = fused + async counting with speculative
+overlap, prefix-grouped join and autotuned blocks.  The per-config wall
+times, speedups and overlap seconds are written to ``BENCH_exec_time.json``
+so the perf trajectory is tracked across PRs.
+"""
+
+import jax
+
+from .common import ALGOS, DATASETS, MapReduceRuntime, emit, load, timed_mine, write_json
 
 MIN_SUPS = {
     "c20d10k": [0.25, 0.20, 0.15, 0.125],
@@ -9,24 +19,61 @@ MIN_SUPS = {
     "mushroom": [0.45, 0.40, 0.35, 0.31],
 }
 
+# the paper's headline algorithms get the pipeline A/B treatment
+AB_ALGOS = ["optimized_vfpc", "optimized_etdpc"]
+
 
 def run(fast: bool = False):
     rows = []
+    record = {"backend": jax.default_backend(), "pipeline_ab": {}, "grid": {}}
     for ds in DATASETS:
         txns, n_items = load(ds)
         sups = MIN_SUPS[ds][-2:] if fast else MIN_SUPS[ds]
         algos = ["spc", "fpc", "vfpc", "optimized_vfpc"] if fast else ALGOS
-        base_levels = None
         for sup in sups:
             for algo in algos:
                 res, wall = timed_mine(txns, n_items, sup, algo)
                 levels = {k: v[0].shape[0] for k, v in res.levels.items()}
-                if (sup, ds) == (sups[0], ds) and base_levels is None:
-                    base_levels = levels
+                record["grid"][f"{ds}/{algo}/sup={sup}"] = round(wall, 4)
                 rows.append((f"fig_exec/{ds}/{algo}/sup={sup}",
                              round(wall * 1e6 / max(res.dispatches, 1), 1),
                              f"wall={wall:.3f}s phases={res.n_phases} "
                              f"dispatches={res.dispatches} max_k={max(levels)}"))
+
+        # -- pipeline before/after on the paper's headline algorithms ---------
+        if fast and ds != "mushroom":
+            continue          # CI smoke: one dataset's A/B is enough
+        sup = DATASETS[ds]["min_sup"]
+        reps = 2 if fast else 3
+        for algo in AB_ALGOS:
+            res_b, wall_b = timed_mine(
+                txns, n_items, sup, algo, warm=True, reps=reps,
+                runtime=MapReduceRuntime(autotune=False), pipeline=False)
+            res_a, wall_a = timed_mine(
+                txns, n_items, sup, algo, warm=True, reps=reps,
+                runtime=MapReduceRuntime(autotune=True), pipeline=True)
+            assert res_b.itemsets() == res_a.itemsets(), (ds, algo)
+            speedup = wall_b / wall_a if wall_a > 0 else float("inf")
+            record["pipeline_ab"][f"{ds}/{algo}"] = {
+                "before_s": round(wall_b, 4),
+                "after_s": round(wall_a, 4),
+                "speedup": round(speedup, 2),
+                "overlap_s": round(res_a.overlap_seconds, 4),
+            }
+            rows.append((f"pipeline_ab/{ds}/{algo}/sup={sup}",
+                         round(wall_a * 1e6, 1),
+                         f"before={wall_b:.3f}s after={wall_a:.3f}s "
+                         f"speedup={speedup:.2f}x "
+                         f"overlap={res_a.overlap_seconds*1e3:.1f}ms"))
+    ab = record["pipeline_ab"]
+    if ab:
+        sp = [v["speedup"] for v in ab.values()]
+        geo = 1.0
+        for s in sp:
+            geo *= s
+        record["speedup_geomean"] = round(geo ** (1 / len(sp)), 2)
+        record["overlap_total_s"] = round(sum(v["overlap_s"] for v in ab.values()), 4)
+    write_json("BENCH_exec_time.json", record)
     emit(rows, ["name", "us_per_call", "derived"])
     return rows
 

@@ -1,8 +1,11 @@
 """Support-count kernel microbenchmark + roofline terms for the counting phase.
 
-On CPU the jnp (XLA) path is the production path and is timed; the Pallas
-kernel is validated in interpret mode (its TPU roofline terms are derived
-analytically: the kernel is a pure VPU bitwise op stream).
+On CPU the jnp (XLA) horizontal path and the vertical gather-scan are the
+production paths and are timed; the Pallas kernels are validated in interpret
+mode (their TPU roofline terms are derived analytically: both are pure VPU
+bitwise op streams).  Autotuned block choices and per-impl throughput are
+written to ``BENCH_kernels.json`` so the perf trajectory is tracked across
+PRs.
 """
 
 import time
@@ -10,38 +13,84 @@ import time
 import jax
 import numpy as np
 
-from repro.core.bitset import pack_itemsets
-from repro.data import dataset_by_name
-from repro.kernels import support_count
+import jax.numpy as jnp
 
-from .common import emit
+from repro.core.bitset import pack_itemsets, vertical_pack
+from repro.core.mapreduce import MapReduceRuntime
+from repro.data import dataset_by_name
+from repro.kernels import (tuned_blocks, vertical_count_jnp,
+                           vertical_count_pallas)
+from repro.kernels.ops import _support_count_jnp
+
+from .common import emit, write_json
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())           # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
 
 
 def run(fast: bool = False):
     rows = []
+    record = {"backend": jax.default_backend(), "autotuned": {}, "kernels": {}}
     txns, n_items = dataset_by_name("mushroom", scale=0.25 if fast else 1.0)
     db = pack_itemsets([list(t) for t in txns], n_items)
+    vdb = vertical_pack(db, n_items)
     rng = np.random.default_rng(0)
+    W = db.shape[1]
+    rt = MapReduceRuntime()  # only for _padded_indices
+    rt._n_items = n_items
+
     for C in [256, 2048] if fast else [256, 2048, 16384]:
         idx = rng.integers(0, len(db), C)
         cands = db[idx]
-        out = support_count(cands, db, impl="jnp")
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        reps = 3
-        for _ in range(reps):
-            out = support_count(cands, db, impl="jnp")
-        jax.block_until_ready(out)
-        wall = (time.perf_counter() - t0) / reps
+        cand_idx = rt._padded_indices(cands)
+        kmax = cand_idx.shape[1]
+
+        # horizontal jnp (XLA) path, timed with the autotuned txn block
+        cfg = tuned_blocks("jnp", C=C, T=len(db), W=W)
+        cj, dj = jnp.asarray(cands), jnp.asarray(db)
+        blk = min(cfg["txn_block"], len(db))
+        wall = _time(lambda: _support_count_jnp(cj, dj, block=blk))
         pairs = C * len(db)
-        # analytic TPU roofline for the Pallas kernel (bitwise AND+cmp+reduce):
-        W = db.shape[1]
         ops = pairs * (W * 3 + 1)            # and, cmp, and-reduce, add
         bytes_hbm = (C * W + len(db) * W) * 4  # each tile read once (blocked)
-        rows.append((f"kernel_support_count/C={C}/T={len(db)}",
-                     round(wall * 1e6, 1),
+        name = f"kernel_support_count/C={C}/T={len(db)}"
+        record["kernels"][name] = {"impl": "jnp", "us": round(wall * 1e6, 1),
+                                   "gops_cpu": round(ops / wall / 1e9, 2)}
+        record["autotuned"][f"jnp/C={C}"] = cfg
+        rows.append((name, round(wall * 1e6, 1),
                      f"pairs={pairs} gops={ops/wall/1e9:.2f}(cpu) "
                      f"tpu_compute_s={ops/197e12:.2e} tpu_mem_s={bytes_hbm/819e9:.2e}"))
+
+        # vertical gather-scan (CPU production path), autotuned block
+        vcfg = tuned_blocks("vertical", C=C, T=vdb.shape[1], W=W, kmax=kmax)
+        wall_v = _time(lambda: vertical_count_jnp(vdb, cand_idx, **vcfg))
+        words = C * kmax * vdb.shape[1]
+        namev = f"kernel_vertical_count/C={C}/Tw={vdb.shape[1]}/k={kmax}"
+        record["kernels"][namev] = {
+            "impl": "vertical", "us": round(wall_v * 1e6, 1),
+            "block": vcfg, "gwords_cpu": round(words / wall_v / 1e9, 2)}
+        record["autotuned"][f"vertical/C={C}"] = vcfg
+        rows.append((namev, round(wall_v * 1e6, 1),
+                     f"words={words} block={vcfg} "
+                     f"speedup_vs_horizontal={wall/wall_v:.1f}x"))
+
+    # Pallas vertical kernel: interpret-mode validation on a tiny slice
+    Cs, ks = 64, 3
+    idx_small = rt._padded_indices(db[rng.integers(0, len(db), Cs)])[:, :ks]
+    ref = np.asarray(vertical_count_jnp(vdb, idx_small))
+    got = np.asarray(vertical_count_pallas(vdb, idx_small, interpret=True))
+    ok = bool((ref == got).all())
+    record["kernels"]["vertical_pallas_interpret_valid"] = ok
+    rows.append(("kernel_vertical_pallas/interpret_valid", int(ok),
+                 f"C={Cs} kmax={ks} matches_jnp={ok}"))
+
+    write_json("BENCH_kernels.json", record)
     emit(rows, ["name", "us_per_call", "derived"])
     return rows
 

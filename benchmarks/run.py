@@ -24,14 +24,22 @@ SUITES = {
 }
 
 
+SMOKE_SUITES = ("exec_time", "kernels")   # the CI pass: pipeline A/B + kernels
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced datasets/algorithms (CI-sized)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: --fast sizes, exec_time + kernels only")
     ap.add_argument("--only", default=None, choices=sorted(SUITES))
     args = ap.parse_args()
 
-    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    if args.smoke:
+        args.fast = True
+    suites = {args.only: SUITES[args.only]} if args.only else (
+        {k: SUITES[k] for k in SMOKE_SUITES} if args.smoke else SUITES)
     t0 = time.time()
     for name, mod in suites.items():
         print(f"== {name} ==", flush=True)

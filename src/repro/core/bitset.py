@@ -67,33 +67,45 @@ def singleton_masks(n_items: int) -> np.ndarray:
     return out
 
 
+def floor_log2(x: np.ndarray) -> np.ndarray:
+    """floor(log2(x)) for positive ints via the float64 exponent field.
+
+    Exact for x < 2^53 (uint32 qualifies); ~3× faster than np.log2 because it
+    is a cast + shift + mask instead of a transcendental (§Perf iteration M-A).
+    Zeros map to -1023-ish garbage — callers must mask.
+    """
+    f = x.astype(np.float64)
+    return ((f.view(np.uint64) >> np.uint64(52)).astype(np.int64) & 0x7FF) - 1023
+
+
 def highest_bit_index(masks: np.ndarray) -> np.ndarray:
-    """Index of the highest set bit per row; -1 for empty masks."""
+    """Index of the highest set bit per ``(..., W)`` mask; -1 for empty masks."""
     masks = np.asarray(masks, dtype=np.uint32)
-    n, W = masks.shape
-    hi = np.full(n, -1, dtype=np.int64)
+    *lead, W = masks.shape
+    hi = np.full(lead, -1, dtype=np.int64)
     for wi in range(W):
-        word = masks[:, wi].astype(np.int64)
+        word = masks[..., wi].astype(np.int64)
         nz = word != 0
-        # floor(log2(word)) is exact for < 2**53 in float64.
-        bl = np.zeros(n, dtype=np.int64)
-        bl[nz] = np.floor(np.log2(word[nz])).astype(np.int64)
+        if not nz.any():
+            continue
+        bl = floor_log2(np.where(nz, word, 1))
         hi = np.where(nz, wi * WORD_BITS + bl, hi)
     return hi
 
 
 def lowest_bit_index(masks: np.ndarray) -> np.ndarray:
-    """Index of the lowest set bit per row; a large sentinel for empty masks."""
+    """Index of the lowest set bit per ``(..., W)`` mask; ``W*32 + 1`` sentinel
+    for empty masks."""
     masks = np.asarray(masks, dtype=np.uint32)
-    n, W = masks.shape
+    *lead, W = masks.shape
     sentinel = W * WORD_BITS + 1
-    lo = np.full(n, sentinel, dtype=np.int64)
-    for wi in range(W - 1, -1, -1):
-        word = masks[:, wi].astype(np.int64)
-        low = word & -word
-        nz = word != 0
-        bl = np.zeros(n, dtype=np.int64)
-        bl[nz] = np.floor(np.log2(low[nz])).astype(np.int64)
+    lo = np.full(lead, sentinel, dtype=np.int64)
+    for wi in range(W):
+        word = masks[..., wi].astype(np.int64)
+        nz = (word != 0) & (lo == sentinel)   # first word with a set bit wins
+        if not nz.any():
+            continue
+        bl = floor_log2(np.where(nz, word & -word, 1))
         lo = np.where(nz, wi * WORD_BITS + bl, lo)
     return lo
 
@@ -201,18 +213,6 @@ def vertical_pack(db_masks: np.ndarray, n_items: int) -> np.ndarray:
         bt = np.concatenate([bt, np.zeros((bt.shape[0], pad), np.uint8)], axis=1)
     packed = np.packbits(bt, axis=1, bitorder="little")
     return np.ascontiguousarray(packed.view(np.uint32))
-
-
-def masks_to_indices(masks: np.ndarray, k: int) -> np.ndarray:
-    """(C, W) bitmasks with exactly k bits each → (C, k) ascending item ids."""
-    masks = np.asarray(masks, dtype=np.uint32)
-    C, W = masks.shape
-    shifts = np.arange(WORD_BITS, dtype=np.uint32)
-    bits = ((masks[:, :, None] >> shifts[None, None, :]) & np.uint32(1))
-    bits = bits.reshape(C, -1).astype(bool)
-    rows, cols = np.nonzero(bits)
-    assert rows.size == C * k, (rows.size, C, k)
-    return cols.reshape(C, k).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

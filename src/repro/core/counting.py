@@ -1,7 +1,9 @@
 """Device-side support counting used inside the MapReduce runtime.
 
 These functions are traced (called inside ``jax.jit`` / ``shard_map``), so they
-take pre-padded static shapes and never touch the host.
+take pre-padded static shapes and never touch the host.  Block sizes are
+decided *before* tracing by the autotuner (:mod:`repro.kernels.autotune`) and
+passed in as static keywords.
 """
 
 from __future__ import annotations
@@ -11,10 +13,14 @@ import jax.numpy as jnp
 
 from repro.kernels.support_count import support_count_pallas
 from repro.kernels.ops import _empty_cand_correction, _support_count_jnp
+from repro.kernels.vertical_count import (DEFAULT_BLOCK, DEFAULT_BT,
+                                          vertical_count_jnp,
+                                          vertical_count_pallas)
 
 
 def local_counts(db_local: jax.Array, cands: jax.Array, impl: str,
-                 txn_block: int = 4096) -> jax.Array:
+                 txn_block: int = 4096, bc: int | None = None,
+                 bt: int = 512) -> jax.Array:
     """Per-device support counts (the Mapper + Combiner of one split).
 
     Args:
@@ -22,6 +28,7 @@ def local_counts(db_local: jax.Array, cands: jax.Array, impl: str,
       cands:    (C, W) uint32 — candidate bitmasks (replicated, zero-padded,
                 C a multiple of the kernel block).
       impl:     "pallas" | "pallas_interpret" | "jnp".
+      txn_block / bc / bt: block sizes (autotuned by the runtime).
 
     Returns: (C,) int32 local counts.
     """
@@ -29,8 +36,7 @@ def local_counts(db_local: jax.Array, cands: jax.Array, impl: str,
         block = min(txn_block, max(db_local.shape[0], 1))
         return _support_count_jnp(cands, db_local, block=block)
     if impl in ("pallas", "pallas_interpret"):
-        bc = min(256, cands.shape[0])
-        bt = 512
+        bc = min(bc or 256, cands.shape[0])
         nd = db_local.shape[0]
         pad = (-nd) % bt
         if pad:
@@ -43,33 +49,24 @@ def local_counts(db_local: jax.Array, cands: jax.Array, impl: str,
 
 
 def local_counts_vertical(vdb_local: jax.Array, cand_idx: jax.Array,
-                          block: int = 2048) -> jax.Array:
+                          impl: str = "jnp", block: int = DEFAULT_BLOCK,
+                          bt: int = DEFAULT_BT) -> jax.Array:
     """Vertical-layout support counting (§Perf iteration M-D).
 
     vdb_local: (I+1, Tw) uint32 — item-major transaction bitmaps for this
       shard; row I is the valid-transaction mask (AND identity for padding).
     cand_idx: (C, kmax) int32 — item ids per candidate, padded with I.
+    impl: "jnp" (blocked gather-scan) | "pallas" | "pallas_interpret"
+      (tiled popcount-AND kernel, kernels/vertical_count.py).
 
     count = popcount(AND of the candidate's item rows).  Work per candidate is
     O(k · N/32) words instead of the horizontal O(N · W) — the vertical data
     layout of Jen et al. ([15] in the paper), adopted as a beyond-paper
     optimization of the counting phase.
     """
-    C, kmax = cand_idx.shape
-    pad = (-C) % block
-    if pad:
-        cand_idx = jnp.concatenate(
-            [cand_idx, jnp.full((pad, kmax), vdb_local.shape[0] - 1,
-                                cand_idx.dtype)], axis=0)
-    blocks = cand_idx.reshape(-1, block, kmax)
-
-    def body(_, idx_blk):
-        rows = vdb_local[idx_blk]                    # (block, kmax, Tw)
-        acc = rows[:, 0]
-        for j in range(1, kmax):                     # kmax tiny: unrolled ANDs
-            acc = acc & rows[:, j]
-        cnt = jax.lax.population_count(acc).astype(jnp.int32).sum(-1)
-        return None, cnt
-
-    _, counts = jax.lax.scan(body, None, blocks)
-    return counts.reshape(-1)[:C]
+    if impl in ("pallas", "pallas_interpret"):
+        return vertical_count_pallas(vdb_local, cand_idx, bt=bt,
+                                     interpret=(impl == "pallas_interpret"))
+    if impl == "jnp":
+        return vertical_count_jnp(vdb_local, cand_idx, block=block)
+    raise ValueError(f"unknown vertical impl {impl!r}")

@@ -5,6 +5,13 @@ then the policy-controlled phase loop, mirroring the paper's driver classes.
 Per-phase checkpointing makes every driver restartable from the last completed
 phase (phases are idempotent — counting is deterministic — the same property
 Hadoop's task re-execution relies on).
+
+With ``pipeline=True`` (default) every counting job is fused (device-side
+min-support filter, packed mask home transfer) and dispatched asynchronously,
+and the host speculatively joins the next level while a job is in flight —
+the device-resident phase pipeline of DESIGN.md §4.  ``pipeline=False``
+reproduces the legacy synchronous/unfused loop (kept for A/B benchmarking and
+equivalence tests).
 """
 
 from __future__ import annotations
@@ -21,6 +28,11 @@ from .mapreduce import MapReduceRuntime
 from .phases import PhaseResult, bucket_pad, run_phase
 from .policy import ALGORITHMS, PhaseStats
 
+# speculate on the next phase's join only when the current level kept at least
+# this fraction of its candidates — the wasted-work factor of joining the
+# un-filtered level is (|C|/|L|)², so a low survival rate makes the gamble bad
+SPEC_SURVIVAL_THRESHOLD = 0.5
+
 
 @dataclasses.dataclass
 class MiningResult:
@@ -34,6 +46,7 @@ class MiningResult:
     dispatches: int
     compiles: int
     straggler_events: int = 0
+    overlap_seconds: float = 0.0    # host gen time overlapped with counting jobs
 
     def itemsets(self) -> dict:
         """Friendly view: k -> {sorted item tuple: count}."""
@@ -90,6 +103,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
          checkpoint_dir: str | None = None, resume: bool = True,
          spec_factor: float = 4.0, max_k: int = 64,
          balance_shards_by_width: bool = False,
+         pipeline: bool = True,
          count_hook=None) -> MiningResult:
     """Mine frequent itemsets with the selected pass-combining algorithm.
 
@@ -105,6 +119,8 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
       spec_factor: straggler threshold — a counting job slower than
         spec_factor × the median job time is re-dispatched once (speculative
         re-execution analogue; idempotent by determinism).
+      pipeline: fused + async counting jobs with speculative gen/count overlap
+        (DESIGN.md §4); False runs the legacy synchronous unfused loop.
       count_hook: test hook called around each counting job (for fault and
         straggler injection).
 
@@ -122,15 +138,14 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
             # static straggler mitigation: LPT-balance per-shard total width
             # (the paper's InputSplit-sizing concern, §5.2)
             from repro.data.loader import balance_shards
-            rt_for_shards = runtime or MapReduceRuntime()
-            runtime = rt_for_shards
-            txn_list = balance_shards(txn_list, rt_for_shards.n_data_shards)
+            txn_list = balance_shards(txn_list, runtime.n_data_shards)
         db_masks = pack_itemsets(txn_list, n_items)
     db_masks = np.asarray(db_masks, dtype=np.uint32)
     n_txns = db_masks.shape[0]
     min_count = min_sup * n_txns
 
     t_start = time.perf_counter()
+    overlap_start = runtime.stats.overlap_seconds
     db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
 
     levels: dict = {}
@@ -166,8 +181,14 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
     if k_prev is None:
         t0 = time.perf_counter()
         singles = singleton_masks(n_items)
-        counts = runtime.phase_count(db_sharded, bucket_pad(singles))[:n_items]
-        keep = counts >= min_count
+        if pipeline:
+            keep, counts = runtime.phase_count_filtered(
+                db_sharded, bucket_pad(singles), min_count, n_valid=n_items)
+            # candidate-sharded jobs ignore n_valid (shard symmetry): re-slice
+            keep, counts = keep[:n_items], counts[:n_items]
+        else:
+            counts = runtime.phase_count(db_sharded, bucket_pad(singles))[:n_items]
+            keep = counts >= min_count
         levels[1] = (singles[keep], counts[keep])
         el = time.perf_counter() - t0
         phases.append(PhaseResult(1, 1, [n_items], 0.0, el, el,
@@ -178,6 +199,12 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
             _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
 
     # -- phase loop ------------------------------------------------------------
+    pending_spec = None       # SpecJoin over the previous phase's last level
+    pending_keep = None       # its keep mask (resolves spec to join(L) exactly)
+    # |L|/|C| of the newest counted level — Job1 (or the resumed history tail)
+    # seeds the speculation guard
+    last_survival = (history[-1][1] / history[-1][0]
+                     if history and history[-1][0] else 0.0)
     while k_prev in levels and levels[k_prev][0].shape[0] > 0 and k_prev < max_k:
         prev_frequent = levels[k_prev][0]
         mode, val = policy.decide(_stats(len(history) - 1), _stats(len(history) - 2))
@@ -187,16 +214,26 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         else:  # budget_alpha: ct = alpha * |L_prev last level|
             kwargs["budget"] = float(val) * prev_frequent.shape[0]
 
+        do_spec = pipeline and last_survival >= SPEC_SURVIVAL_THRESHOLD
         if count_hook is not None:
             count_hook("phase_start", k_prev)
+        gen_method = "prefix" if pipeline else "pairwise"
         res = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
-                        min_count, optimized=optimized, **kwargs)
+                        min_count, optimized=optimized, fused=pipeline,
+                        speculate=do_spec, spec=pending_spec,
+                        prev_keep=pending_keep, gen_method=gen_method, **kwargs)
         # Straggler mitigation: re-dispatch a pathologically slow counting job.
         if count_times and res.count_seconds > spec_factor * float(np.median(count_times)):
             straggler_events += 1
             t_re = time.perf_counter()
+            # no speculation on the re-dispatch: the first run already did (and
+            # counted) it, and a second join would double-book overlap_seconds
             res2 = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
-                             min_count, optimized=optimized, **kwargs)
+                             min_count, optimized=optimized, fused=pipeline,
+                             speculate=False, spec=pending_spec,
+                             prev_keep=pending_keep, gen_method=gen_method,
+                             **kwargs)
+            res2.spec, res2.last_keep = res.spec, res.last_keep
             if time.perf_counter() - t_re < res.elapsed_seconds:
                 res = res2
         count_times.append(res.count_seconds)
@@ -205,10 +242,20 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
             break
         phases.append(res)
         levels.update(res.levels)
+        # policies see the phase's own cost: speculative-join time belongs to
+        # the *next* phase's generation (which it replaces), so exclude it —
+        # otherwise time-threshold policies (DPC/ETDPC) feed back on it
         history.append((sum(res.candidate_counts),
                         res.frequent_counts[-1] if res.frequent_counts else 0,
-                        res.elapsed_seconds))
+                        max(res.elapsed_seconds - res.spec_seconds, 0.0)))
         k_prev = res.k_start + res.npass - 1
+        pending_spec, pending_keep = res.spec, res.last_keep
+        # the spec arrays are only needed until the next phase resolves them;
+        # don't let MiningResult.phases pin every phase's join output forever
+        res.spec = res.last_keep = None
+        last_survival = (res.frequent_counts[-1] / res.candidate_counts[-1]
+                         if res.candidate_counts and res.candidate_counts[-1]
+                         else 0.0)
         if checkpoint_dir:
             _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
 
@@ -219,4 +266,5 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         levels=levels, phases=phases,
         total_seconds=time.perf_counter() - t_start,
         dispatches=runtime.stats.dispatches, compiles=runtime.stats.compiles,
-        straggler_events=straggler_events)
+        straggler_events=straggler_events,
+        overlap_seconds=runtime.stats.overlap_seconds - overlap_start)

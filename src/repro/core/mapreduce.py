@@ -6,31 +6,125 @@ Hadoop concept → this runtime:
 * Mapper + Combiner     → per-device support-count kernel over the local shard
                           (local sums never leave the device uncombined)
 * shuffle + Reducer     → one ``jax.lax.psum`` over the ``data`` axis
-* one MapReduce *job*   → one jitted ``shard_map`` dispatch (host sync included)
+* one MapReduce *job*   → one jitted ``shard_map`` dispatch
 
 The runtime tracks dispatch and compile counts: the paper's objective —
 minimizing the number of scheduled jobs — maps to minimizing dispatches here,
 and re-compiles are the analogue of job setup cost.
+
+Device-resident phase pipeline (DESIGN.md §4): a job can be dispatched
+
+* **fused** — the ``count >= min_count`` filter runs on device inside the
+  shard_map'd job, so only a bit-packed keep mask (``C/8`` bytes) plus the
+  min-count-filtered int32 counts cross back to the host instead of every
+  padded candidate's count;
+* **async** — ``phase_count_async`` returns a :class:`CountFuture` and never
+  calls ``block_until_ready``; the host keeps generating the next level's
+  candidates while the job is in flight (``RuntimeStats.overlap_seconds``
+  records that overlap).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
+from repro.kernels.autotune import tuned_blocks
+
 from .counting import local_counts, local_counts_vertical
-from .bitset import masks_to_indices, popcount_rows, vertical_pack
+from .bitset import popcount_rows
+
+IMPLS = ("jnp", "pallas", "pallas_interpret",
+         "vertical", "vertical_pallas", "vertical_pallas_interpret")
 
 
 @dataclasses.dataclass
 class RuntimeStats:
     dispatches: int = 0
     compiles: int = 0
-    rows_counted: int = 0  # candidates counted across all dispatches
+    rows_counted: int = 0       # candidates counted across all dispatches
+    fused_dispatches: int = 0   # jobs that filtered on device
+    overlap_seconds: float = 0.0  # host gen time spent while a job was in flight
+    bytes_to_host: int = 0      # result bytes actually fetched from device
+
+
+def _pack_mask(keep: jax.Array) -> jax.Array:
+    """(n,) bool → (ceil(n/32),) uint32, bit ``i%32`` of word ``i//32`` = keep[i]."""
+    pad = (-keep.shape[0]) % 32
+    if pad:
+        keep = jnp.concatenate([keep, jnp.zeros((pad,), keep.dtype)])
+    b = keep.reshape(-1, 32).astype(jnp.uint32)
+    return (b << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def _unpack_mask(packed: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`_pack_mask` on host → (n,) bool."""
+    bits = np.unpackbits(packed.view(np.uint8), bitorder="little")
+    return bits[:n].astype(bool)
+
+
+class CountFuture:
+    """Handle for one in-flight counting job.
+
+    The device arrays are not fetched (and the host never blocks) until
+    ``result()`` is called — the double-buffering half of the async pipeline.
+
+    ``result()`` returns host counts ``(C,) int64`` for a plain job, or a
+    ``(keep_mask (C,) bool, counts (C,) int64)`` pair for a fused job (counts
+    are zeroed where the device filter dropped the candidate; ``None`` when
+    the job was dispatched with ``with_counts=False``).
+    """
+
+    def __init__(self, runtime: "MapReduceRuntime", raw, *, fused: bool,
+                 with_counts: bool, n_rows: int):
+        self._rt = runtime
+        self._raw = raw
+        self._fused = fused
+        self._with_counts = with_counts
+        self._n = n_rows
+        self._result = None
+        self.wait_seconds = 0.0   # host time actually blocked in result()
+
+    def ready(self) -> bool:
+        """Best-effort non-blocking completion probe."""
+        try:
+            return all(leaf.is_ready()
+                       for leaf in jax.tree_util.tree_leaves(self._raw))
+        except AttributeError:      # very old jax.Array without is_ready
+            return True
+
+    def result(self):
+        if self._result is None:
+            t0 = time.perf_counter()
+            raw = jax.block_until_ready(self._raw)
+            self.wait_seconds = time.perf_counter() - t0
+            stats = self._rt.stats
+            if self._fused:
+                packed = np.asarray(raw[0])
+                stats.bytes_to_host += packed.nbytes
+                if packed.dtype == np.uint32:      # bit-packed (replicated job)
+                    keep = _unpack_mask(packed, self._n)
+                else:                              # plain bool (cand-sharded)
+                    keep = packed[:self._n].astype(bool)
+                counts = None
+                if self._with_counts:
+                    c = np.asarray(raw[1])
+                    stats.bytes_to_host += c.nbytes
+                    counts = c[:self._n].astype(np.int64)
+                self._result = (keep, counts)
+            else:
+                c = np.asarray(raw)
+                stats.bytes_to_host += c.nbytes
+                self._result = c[:self._n].astype(np.int64)
+        return self._result
 
 
 class MapReduceRuntime:
@@ -40,25 +134,31 @@ class MapReduceRuntime:
       mesh: a Mesh containing a ``data`` axis (other axes are unused here but
         allowed, so the production (data, model) mesh can be passed directly).
         Defaults to a 1-D mesh over all local devices.
-      impl: counting implementation — "jnp" (default off-TPU), "pallas",
-        "pallas_interpret".
+      impl: counting implementation — "jnp", "pallas", "pallas_interpret",
+        "vertical" (jnp gather-scan), "vertical_pallas",
+        "vertical_pallas_interpret".  Default: "pallas" on TPU, "vertical"
+        elsewhere.
       cand_axis: optional mesh axis name to additionally shard *candidates*
         over (2-D decomposition; beyond-paper, see DESIGN.md). None replicates
         candidates, matching the paper (every mapper holds the full trie).
+      autotune: consult the block-size autotuner when building counting jobs
+        (kernels/autotune.py); False pins the static defaults.
     """
 
     def __init__(self, mesh: Mesh | None = None, impl: str | None = None,
-                 cand_axis: str | None = None):
+                 cand_axis: str | None = None, autotune: bool = True):
         if mesh is None:
-            mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((len(jax.devices()),), ("data",))
         if impl is None:
             # TPU: dense horizontal Pallas kernel; CPU: vertical layout
             # (§Perf iteration M-D — gather-heavy but 10-70× less word work)
             impl = "pallas" if jax.default_backend() == "tpu" else "vertical"
+        if impl not in IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; options: {IMPLS}")
         self.mesh = mesh
         self.impl = impl
         self.cand_axis = cand_axis
+        self.autotune = autotune
         self.stats = RuntimeStats()
         self._shape_cache: set = set()
         self._jitted = {}
@@ -68,6 +168,10 @@ class MapReduceRuntime:
     def n_data_shards(self) -> int:
         return self.mesh.shape["data"]
 
+    @property
+    def vertical(self) -> bool:
+        return self.impl.startswith("vertical")
+
     # -- data distribution ---------------------------------------------------
 
     def scatter_db(self, db_masks: np.ndarray, n_items: int | None = None):
@@ -76,13 +180,14 @@ class MapReduceRuntime:
         Horizontal impls return the (N, W) row-sharded matrix; the vertical
         impl returns (d, I+1, Tw) per-shard item-major bitmaps (built host-side
         once — the InputFormat step of the job)."""
+        from .bitset import vertical_pack
         n, w = db_masks.shape
         d = self.n_data_shards
         pad = (-n) % d
         if pad:
             db_masks = np.concatenate(
                 [db_masks, np.zeros((pad, w), np.uint32)], axis=0)
-        if self.impl == "vertical":
+        if self.vertical:
             assert n_items is not None, "vertical impl needs n_items"
             self._n_items = n_items
             per = db_masks.shape[0] // d
@@ -96,26 +201,70 @@ class MapReduceRuntime:
 
     # -- one MapReduce job ----------------------------------------------------
 
-    def _build(self, vertical: bool):
+    def _tuned(self, payload_shape, db_shape) -> dict:
+        """Autotuned block sizes for one counting job (static at trace time)."""
+        from repro.kernels.autotune import DEFAULTS
+        if self.vertical:
+            kind = self.impl[len("vertical"):].lstrip("_") or "jnp"
+            impl_key = "vertical" if kind == "jnp" else f"vertical_{kind}"
+            if not self.autotune:
+                return dict(DEFAULTS[impl_key])
+            C, kmax = payload_shape
+            return tuned_blocks(impl_key, C=C, T=db_shape[-1],
+                                W=db_shape[-2] // 32 + 1, kmax=kmax)
+        if not self.autotune:
+            return dict(DEFAULTS[self.impl])
+        C, W = payload_shape
+        return tuned_blocks(self.impl, C=C, T=db_shape[0], W=W)
+
+    def _build(self, fused: bool, with_counts: bool, payload_shape, db_shape,
+               n_valid: int | None = None):
         impl = self.impl
+        vertical = self.vertical
         cand_axis = self.cand_axis
         mesh = self.mesh
         cand_spec = P(cand_axis, None) if cand_axis else P(None, None)
         out_spec = P(cand_axis) if cand_axis else P()
+        blocks = self._tuned(payload_shape, db_shape)
 
         if vertical:
-            def mapper(vdb_local, idx_local):
-                local = local_counts_vertical(vdb_local[0], idx_local)
-                return jax.lax.psum(local, "data")
-            in_specs = (P("data", None, None), cand_spec)
-        else:
-            def mapper(db_local, cands_local):
-                local = local_counts(db_local, cands_local, impl)  # map+combine
-                return jax.lax.psum(local, "data")                  # reduce
-            in_specs = (P("data", None), cand_spec)
+            kind = impl[len("vertical"):].lstrip("_") or "jnp"
 
-        fn = jax.shard_map(mapper, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_spec, check_vma=False)
+            def count_local(vdb_local, idx_local):
+                return local_counts_vertical(vdb_local[0], idx_local,
+                                             impl=kind, **blocks)
+            db_spec = P("data", None, None)
+        else:
+            def count_local(db_local, cands_local):
+                return local_counts(db_local, cands_local, impl, **blocks)
+            db_spec = P("data", None)
+
+        if fused:
+            def mapper(db_local, payload_local, thr):
+                local = count_local(db_local, payload_local)  # map + combine
+                counts = jax.lax.psum(local, "data")          # reduce
+                if n_valid is not None:
+                    counts = counts[:n_valid]   # bucket-pad tail never leaves
+                keep = counts >= thr                          # filter, fused
+                # candidate-sharded jobs return a plain bool mask: per-shard
+                # bit-packing pads each shard to a word boundary, which does
+                # not concatenate into one contiguous global bitstream
+                mask = keep if cand_axis else _pack_mask(keep)
+                if with_counts:
+                    return mask, jnp.where(keep, counts, 0)
+                return (mask,)
+            in_specs = (db_spec, cand_spec, P())
+            pack_spec = P(cand_axis) if cand_axis else P()
+            out_specs = (pack_spec, out_spec) if with_counts else (pack_spec,)
+        else:
+            def mapper(db_local, payload_local):
+                local = count_local(db_local, payload_local)  # map + combine
+                return jax.lax.psum(local, "data")            # reduce
+            in_specs = (db_spec, cand_spec)
+            out_specs = out_spec
+
+        fn = shard_map(mapper, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
         return jax.jit(fn)
 
     def _padded_indices(self, masks: np.ndarray) -> np.ndarray:
@@ -136,20 +285,35 @@ class MapReduceRuntime:
         idx[rows, np.arange(rows.size) - starts[rows]] = cols
         return idx
 
-    def phase_count(self, db_sharded, cands_padded: np.ndarray) -> np.ndarray:
-        """Run one MapReduce job: count every candidate over the whole DB.
+    def phase_count_async(self, db_sharded, cands_padded: np.ndarray,
+                          min_count: float | None = None,
+                          with_counts: bool = True,
+                          n_valid: int | None = None) -> CountFuture:
+        """Dispatch one MapReduce job without waiting for it.
 
         ``cands_padded`` rows must already be padded to the runtime block
-        multiple (see phases.bucket_pad).  Returns host int64 counts.
+        multiple (see phases.bucket_pad).  When ``min_count`` is given the job
+        is **fused**: the support filter runs on device and only the packed
+        keep mask (+ filtered counts unless ``with_counts=False``) is
+        transferred when the returned :class:`CountFuture` is consumed —
+        sliced on device to ``n_valid`` rows (the real, pre-padding candidate
+        count), so the bucket-pad tail never crosses to the host.
         """
-        vertical = self.impl == "vertical"
-        if vertical:
+        fused = min_count is not None
+        if self.vertical:
             payload = jnp.asarray(self._padded_indices(cands_padded))
         else:
             payload = jnp.asarray(cands_padded, dtype=jnp.uint32)
-        key = (vertical, db_sharded.shape, payload.shape)
+        if not fused or self.cand_axis is not None:
+            # unfused keeps the legacy full-padded transfer; candidate-sharded
+            # jobs stay shard-symmetric (no per-shard slicing)
+            n_valid = None
+        n_rows = int(cands_padded.shape[0]) if n_valid is None else int(n_valid)
+        key = (fused, with_counts, n_valid, db_sharded.shape, payload.shape)
         if key not in self._jitted:
-            self._jitted[key] = self._build(vertical)
+            self._jitted[key] = self._build(fused, with_counts,
+                                            payload.shape, db_sharded.shape,
+                                            n_valid=n_valid)
         if key not in self._shape_cache:
             self._shape_cache.add(key)
             self.stats.compiles += 1
@@ -157,8 +321,28 @@ class MapReduceRuntime:
             payload,
             NamedSharding(self.mesh,
                           P(self.cand_axis, None) if self.cand_axis else P(None, None)))
-        out = self._jitted[key](db_sharded, payload)
-        out = np.asarray(jax.block_until_ready(out))
+        args = (db_sharded, payload)
+        if fused:
+            # integer threshold: counts are ints, so >= ceil(min_count) is
+            # exactly the host-side `counts >= min_count` float comparison
+            args += (jnp.int32(math.ceil(min_count)),)
+        out = self._jitted[key](*args)
         self.stats.dispatches += 1
         self.stats.rows_counted += int(cands_padded.shape[0])
-        return out.astype(np.int64)
+        if fused:
+            self.stats.fused_dispatches += 1
+        return CountFuture(self, out, fused=fused, with_counts=with_counts,
+                           n_rows=n_rows)
+
+    def phase_count(self, db_sharded, cands_padded: np.ndarray) -> np.ndarray:
+        """Synchronous unfused job: host int64 counts for every padded row."""
+        return self.phase_count_async(db_sharded, cands_padded).result()
+
+    def phase_count_filtered(self, db_sharded, cands_padded: np.ndarray,
+                             min_count: float, with_counts: bool = True,
+                             n_valid: int | None = None):
+        """Synchronous fused job → ``(keep_mask, filtered_counts_or_None)``."""
+        return self.phase_count_async(db_sharded, cands_padded,
+                                      min_count=min_count,
+                                      with_counts=with_counts,
+                                      n_valid=n_valid).result()

@@ -12,6 +12,14 @@ counting removes.
 
 XLA adaptation: candidate rows are padded to power-of-two buckets so that each
 (bucket, W) counting shape compiles once and is reused (DESIGN.md §2).
+
+Device-resident pipeline (DESIGN.md §4): with ``fused=True`` the min-support
+filter runs inside the counting job and only a packed keep mask + filtered
+counts return to the host; the job is dispatched **asynchronously**, and while
+it is in flight the host speculatively joins the phase's last candidate level
+(parent-indexed, see candidates.SpecJoin) so the *next* phase's first
+``apriori_gen`` collapses to a pair-filter + prune.  The time spent generating
+while a job is in flight is recorded as ``overlap_seconds``.
 """
 
 from __future__ import annotations
@@ -21,7 +29,8 @@ import time
 
 import numpy as np
 
-from .candidates import apriori_gen, non_apriori_gen
+from .candidates import (SpecJoin, apriori_gen, non_apriori_gen, prune,
+                         speculative_join)
 from .mapreduce import MapReduceRuntime
 
 MIN_BUCKET = 256
@@ -55,22 +64,38 @@ class PhaseResult:
     npass: int                         # number of levels combined
     candidate_counts: list             # |C_k| per level (as generated)
     gen_seconds: float                 # candidate generation (join [+ prune]) time
-    count_seconds: float               # counting job (dispatch) time
+    count_seconds: float               # counting job (dispatch + residual wait) time
     elapsed_seconds: float             # total phase wall time
     frequent_counts: list              # |L_k| per level after min_sup filter
     levels: dict                       # k -> (masks (n,W) uint32, counts (n,) int64)
     pruned: bool                       # True if every level pruned (simple phase)
+    overlap_seconds: float = 0.0       # host gen overlapped with the in-flight job
+    spec_seconds: float = 0.0          # total speculative-join time (next phase's gen)
+    spec: SpecJoin | None = None       # speculative join of the last level
+    last_keep: np.ndarray | None = None  # keep mask over the last level's candidates
 
 
 def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
               prev_frequent: np.ndarray, k_prev: int, min_count: float,
               npass: int | None = None, budget: float | None = None,
-              optimized: bool = False, min_bucket: int = MIN_BUCKET) -> PhaseResult:
+              optimized: bool = False, min_bucket: int = MIN_BUCKET,
+              fused: bool = True, speculate: bool = False,
+              spec: SpecJoin | None = None,
+              prev_keep: np.ndarray | None = None,
+              gen_method: str = "prefix") -> PhaseResult:
     """Execute one (possibly multi-pass) MapReduce phase.
 
     Exactly one of ``npass`` (fixed width — SPC/FPC/VFPC style) or ``budget``
     (candidate budget ``ct`` — DPC/ETDPC style: generate levels while the
     cumulative candidate count ≤ ct, always at least one) must be given.
+
+    ``fused`` filters on device (mask + filtered counts come home); plain
+    counts otherwise.  ``speculate`` pre-joins the phase's last candidate
+    level while the counting job is in flight, returning the result in
+    ``PhaseResult.spec`` for the *next* phase; a previous phase's ``spec`` +
+    ``prev_keep`` (its keep mask) turn this phase's first join into an exact
+    pair-filter (candidates.SpecJoin.resolve).  ``gen_method`` selects the
+    join algorithm ("prefix" grouped enumeration vs legacy "pairwise").
 
     Returns a PhaseResult with per-level frequent itemsets.
     """
@@ -80,8 +105,12 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     cur = prev_frequent
     p, total = 0, 0
     while True:
-        gen = apriori_gen if (p == 0 or not optimized) else non_apriori_gen
-        cands = gen(cur, k_prev + p)
+        if p == 0 and spec is not None and prev_keep is not None:
+            # first-level join precomputed during the previous phase's count
+            cands = prune(spec.resolve(prev_keep), prev_frequent, k_prev)
+        else:
+            gen = apriori_gen if (p == 0 or not optimized) else non_apriori_gen
+            cands = gen(cur, k_prev + p, method=gen_method)
         if cands.shape[0] == 0:
             break
         levels_cands.append(cands)
@@ -101,21 +130,51 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     all_cands = np.concatenate(levels_cands, axis=0)
     padded = bucket_pad(all_cands, min_bucket)
     t1 = time.perf_counter()
-    counts = runtime.phase_count(db_sharded, padded)[:all_cands.shape[0]]
-    t_count = time.perf_counter() - t1
+    fut = runtime.phase_count_async(db_sharded, padded,
+                                    min_count=min_count if fused else None,
+                                    n_valid=all_cands.shape[0])
 
+    # -- overlap window: speculative next-phase join while the job is in flight
+    spec_next, t_spec, overlapped = None, 0.0, 0.0
+    if speculate:
+        in_flight = not fut.ready()
+        ts = time.perf_counter()
+        spec_next = speculative_join(levels_cands[-1],
+                                     k_prev + len(levels_cands))
+        t_spec = time.perf_counter() - ts
+        if in_flight:
+            # upper bound: the job may complete mid-join; count_seconds below
+            # holds the residual wait, so the pair is self-consistent
+            overlapped = t_spec
+            runtime.stats.overlap_seconds += overlapped
+
+    if fused:
+        keep_all, counts_all = fut.result()
+    else:
+        counts_all = fut.result()
+        keep_all = None
+    t_count = max(time.perf_counter() - t1 - t_spec, 0.0)
+
+    counts = counts_all[:all_cands.shape[0]]
     levels = {}
     freq_counts = []
+    last_keep = None
     off = 0
     for i, cands in enumerate(levels_cands):
         c = counts[off:off + cands.shape[0]]
+        if keep_all is not None:
+            keep = keep_all[off:off + cands.shape[0]]
+        else:
+            keep = c >= min_count
         off += cands.shape[0]
-        keep = c >= min_count
         levels[k_prev + 1 + i] = (cands[keep], c[keep])
         freq_counts.append(int(keep.sum()))
+        last_keep = keep
     return PhaseResult(
         k_start=k_prev + 1, npass=len(levels_cands),
         candidate_counts=[int(c.shape[0]) for c in levels_cands],
         gen_seconds=t_gen, count_seconds=t_count,
         elapsed_seconds=time.perf_counter() - t0,
-        frequent_counts=freq_counts, levels=levels, pruned=not optimized)
+        frequent_counts=freq_counts, levels=levels, pruned=not optimized,
+        overlap_seconds=overlapped, spec_seconds=t_spec, spec=spec_next,
+        last_keep=last_keep)

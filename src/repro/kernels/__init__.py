@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the counting hot-spot (+ jnp oracles and wrappers)."""
 
+from .autotune import tuned_blocks
 from .ops import support_count
 from .ref import support_count_ref
+from .vertical_count import vertical_count_jnp, vertical_count_pallas
 
-__all__ = ["support_count", "support_count_ref"]
+__all__ = ["support_count", "support_count_ref", "tuned_blocks",
+           "vertical_count_jnp", "vertical_count_pallas"]

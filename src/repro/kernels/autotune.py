@@ -1,0 +1,200 @@
+"""Block-size autotuner for the counting kernels.
+
+The best tile/block sizes for the counting hot-spot depend on backend and on
+the phase's shape regime (candidate rows × transaction rows/words) — exactly
+the knobs the paper turns by re-sizing Hadoop input splits.  On first use per
+``(backend, impl, shape-bucket)`` key the tuner times a small config sweep on
+synthetic data and caches the winner:
+
+* in-process (dict) — so a mining run tunes each bucket at most once;
+* on disk (JSON at ``~/.cache/repro/autotune.json``, override with
+  ``REPRO_AUTOTUNE_CACHE``) — so later processes skip the sweep entirely.
+
+``REPRO_AUTOTUNE=0`` disables timing and returns the static defaults.
+Interpret-mode Pallas (and the Pallas kernels off-TPU generally) are never
+timed: interpret timings are meaningless, so defaults are returned.
+
+Cache format (DESIGN.md §5)::
+
+    {"cpu/vertical/C4096/T1024/W8/k5": {"block": 2048}, ...}
+
+Shape buckets are next-pow2 of the padded candidate/transaction extents, so a
+whole mining run touches only a handful of keys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULTS = {
+    "jnp": {"txn_block": 4096},
+    "pallas": {"bc": 256, "bt": 512},
+    "pallas_interpret": {"bc": 256, "bt": 512},
+    "vertical": {"block": 2048},
+    "vertical_pallas": {"bt": 512},
+    "vertical_pallas_interpret": {"bt": 512},
+}
+
+CONFIGS = {
+    "jnp": [{"txn_block": b} for b in (1024, 4096, 16384)],
+    "pallas": [{"bc": bc, "bt": bt}
+               for bc, bt in ((128, 512), (256, 512), (256, 1024))],
+    "vertical": [{"block": b} for b in (512, 2048, 8192)],
+    "vertical_pallas": [{"bt": b} for b in (512, 1024, 2048)],
+}
+
+# caps on the synthetic timing shapes: tuning must stay ≪ one counting job
+_CAP_C = 4096
+_CAP_T_ROWS = 8192     # horizontal: transaction rows
+_CAP_T_WORDS = 2048    # vertical: transaction words (= 64k transactions)
+
+_memory_cache: dict = {}
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def _load_disk() -> dict:
+    try:
+        with open(cache_path()) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_disk(store: dict) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(store, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # cache is best-effort; in-process dict still holds the winner
+
+
+def _bucket(n: int) -> int:
+    """Next power of two ≥ n (≥ 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _time_once(fn) -> float:
+    out = fn()                      # warm-up: compile + first run
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
+    """Build per-config callables over synthetic data of the bucketed shape."""
+    rng = np.random.default_rng(0)
+    if impl in ("jnp", "pallas"):
+        C = min(C, _CAP_C)
+        T = min(T, _CAP_T_ROWS)
+        cands = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
+        txns = jnp.asarray(rng.integers(0, 2**32, (T, W), dtype=np.uint32))
+        if impl == "jnp":
+            from .ops import _support_count_jnp
+
+            def make(cfg):
+                blk = min(cfg["txn_block"], T)
+                return lambda: _support_count_jnp(cands, txns, block=blk)
+        else:
+            from .support_count import support_count_pallas
+
+            def make(cfg):
+                bc = min(cfg["bc"], C)
+                bt = cfg["bt"]
+                tp = T + ((-T) % bt)
+                tx = jnp.concatenate(
+                    [txns, jnp.zeros((tp - T, W), txns.dtype)], axis=0)
+                return lambda: support_count_pallas(cands, tx, bc=bc, bt=bt)
+        return make
+    if impl in ("vertical", "vertical_pallas"):
+        C = min(C, _CAP_C)
+        Tw = min(T, _CAP_T_WORDS)
+        n_items = max(W * 32 - 1, 1)
+        vdb = rng.integers(0, 2**32, (n_items + 1, Tw), dtype=np.uint32)
+        vdb[-1] = 0xFFFFFFFF                      # valid-transaction mask row
+        vdb = jnp.asarray(vdb)
+        idx = np.full((C, kmax), n_items, np.int32)
+        for j in range(kmax):
+            idx[:, j] = rng.integers(0, n_items, C)
+        idx = jnp.asarray(idx)
+        if impl == "vertical":
+            from .vertical_count import vertical_count_jnp
+
+            def make(cfg):
+                return lambda: vertical_count_jnp(vdb, idx, block=cfg["block"])
+        else:
+            from .vertical_count import vertical_count_pallas
+
+            def make(cfg):
+                return lambda: vertical_count_pallas(vdb, idx, bt=cfg["bt"])
+        return make
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
+                 backend: str | None = None) -> dict:
+    """Best block config for a counting job of the given shape bucket.
+
+    Args:
+      impl: "jnp" | "pallas" | "pallas_interpret" | "vertical" |
+            "vertical_pallas" | "vertical_pallas_interpret".
+      C:    padded candidate rows.
+      T:    transaction rows (horizontal impls) or words (vertical impls).
+      W:    words per bitmask (horizontal) / of the item axis (vertical).
+      kmax: items per candidate (vertical impls only).
+
+    Returns a dict of keyword block sizes for the counting call.
+    """
+    backend = backend or jax.default_backend()
+    untunable = (
+        impl not in CONFIGS
+        or impl.endswith("interpret")
+        or (impl in ("pallas", "vertical_pallas") and backend != "tpu")
+        or os.environ.get("REPRO_AUTOTUNE", "1") == "0"
+    )
+    if untunable:
+        return dict(DEFAULTS.get(impl, {}))
+
+    key = (f"{backend}/{impl}/C{_bucket(C)}/T{_bucket(T)}/W{W}/k{kmax}")
+    if key in _memory_cache:
+        return dict(_memory_cache[key])
+    disk = _load_disk()
+    if key in disk:
+        _memory_cache[key] = dict(disk[key])
+        return dict(disk[key])
+
+    make = _candidate_runner(impl, _bucket(C), _bucket(T), W, kmax)
+    best_cfg, best_t = None, float("inf")
+    for cfg in CONFIGS[impl]:
+        try:
+            t = _time_once(make(cfg))
+        except Exception:       # a config can be invalid for exotic shapes
+            continue
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    if best_cfg is None:
+        best_cfg = DEFAULTS[impl]
+    _memory_cache[key] = dict(best_cfg)
+    disk[key] = dict(best_cfg)
+    _save_disk(disk)
+    return dict(best_cfg)

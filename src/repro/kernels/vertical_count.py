@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: vertical (item-major) popcount-AND support counting.
+
+Vertical layout (DESIGN.md §3): row ``i`` of the vertical DB is the bitmap of
+transactions containing item ``i``; ``support(candidate) = popcount(AND of its
+item rows)``.  Work per candidate is ``O(k · N/32)`` words instead of the
+horizontal ``O(N · W)`` — the vertical data layout of Jen et al. (related work
+[15] of the paper).
+
+Kernel design (replaces the gather-heavy jnp scan):
+
+* grid ``(C, Tw // bt, kmax)`` — candidates × transaction-word blocks × item
+  slots, with the item-slot axis **innermost** so a ``(1, bt)`` VMEM scratch
+  accumulator can AND the candidate's item rows for one transaction block
+  before flushing a popcount partial sum into the ``(1,)`` output block
+  (revisit-accumulate over both inner axes).
+* the ``(C, kmax)`` candidate→row index table is **scalar-prefetched**
+  (``PrefetchScalarGridSpec``), so the vertical-DB BlockSpec's index map picks
+  item row ``idx[c, j]`` directly and each row block is DMA'd into VMEM by the
+  pipeline — no gather instruction in the kernel body at all.
+* padded candidate slots point at the valid-transaction mask row (the AND
+  identity), and transaction-word padding is zeros (contributes 0 popcount),
+  so no correction terms are needed.
+
+VMEM per step: one ``(1, bt)`` row block + the ``(1, bt)`` accumulator — tiny;
+``bt`` is lane-dim tiling (multiples of 128, default 512).  The jnp fallback
+(`vertical_count_jnp`, §Perf iteration M-D) remains the production path on
+CPU, where Pallas runs in interpret mode for validation only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 2048   # candidate block of the jnp scan fallback
+DEFAULT_BT = 512       # transaction words per block (lane dim, multiple of 128)
+
+
+def _vertical_count_kernel(idx_ref, row_ref, o_ref, acc_ref, *, kmax: int):
+    del idx_ref  # consumed by the index maps (scalar prefetch)
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((t == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j == 0)
+    def _load():
+        acc_ref[...] = row_ref[...]
+
+    @pl.when(j > 0)
+    def _and():
+        acc_ref[...] &= row_ref[...]
+
+    @pl.when(j == kmax - 1)
+    def _flush():
+        o_ref[...] += jax.lax.population_count(
+            acc_ref[...]).astype(jnp.int32).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def vertical_count_pallas(vdb: jax.Array, cand_idx: jax.Array,
+                          bt: int = DEFAULT_BT,
+                          interpret: bool = False) -> jax.Array:
+    """Support counts from the vertical layout via the Pallas kernel.
+
+    Args:
+      vdb:      (I+1, Tw) uint32 item-major bitmaps; row I is the
+                valid-transaction mask (AND identity used for padded slots).
+      cand_idx: (C, kmax) int32 item ids per candidate, padded with I.
+      bt:       transaction words per block (clamped to the padded Tw).
+
+    Returns: (C,) int32 counts.
+    """
+    C, kmax = cand_idx.shape
+    _, tw = vdb.shape
+    # Clamp the block to the (128-aligned) word count so tiny DBs don't pad to
+    # a full default block, then zero-pad words up to the block multiple.
+    bt = min(bt, max(((tw + 127) // 128) * 128, 128))
+    pad = (-tw) % bt
+    if pad:
+        vdb = jnp.concatenate(
+            [vdb, jnp.zeros((vdb.shape[0], pad), vdb.dtype)], axis=1)
+    grid = (C, vdb.shape[1] // bt, kmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bt), lambda c, t, j, idx: (idx[c, j], t))],
+        out_specs=pl.BlockSpec((1,), lambda c, t, j, idx: (c,)),
+        scratch_shapes=[pltpu.VMEM((1, bt), jnp.uint32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_vertical_count_kernel, kmax=kmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.int32),
+        interpret=interpret,
+    )(cand_idx.astype(jnp.int32), vdb.astype(jnp.uint32))
+
+
+def vertical_count_jnp(vdb: jax.Array, cand_idx: jax.Array,
+                       block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Blocked jnp oracle/fallback: gather item rows, AND, popcount.
+
+    Scans candidate blocks so peak memory is ``O(block · kmax · Tw)``.
+    """
+    vdb = jnp.asarray(vdb)          # host arrays are fine (oracle/bench use)
+    cand_idx = jnp.asarray(cand_idx)
+    C, kmax = cand_idx.shape
+    pad = (-C) % block
+    if pad:
+        cand_idx = jnp.concatenate(
+            [cand_idx, jnp.full((pad, kmax), vdb.shape[0] - 1,
+                                cand_idx.dtype)], axis=0)
+    blocks = cand_idx.reshape(-1, block, kmax)
+
+    def body(_, idx_blk):
+        rows = vdb[idx_blk]                          # (block, kmax, Tw)
+        acc = rows[:, 0]
+        for j in range(1, kmax):                     # kmax tiny: unrolled ANDs
+            acc = acc & rows[:, j]
+        cnt = jax.lax.population_count(acc).astype(jnp.int32).sum(-1)
+        return None, cnt
+
+    _, counts = jax.lax.scan(body, None, blocks)
+    return counts.reshape(-1)[:C]

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh.
@@ -17,11 +19,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(axis: str = "data"):
     """1-D mesh over all local devices (tests / CPU benches / mining)."""
-    return jax.make_mesh((len(jax.devices()),), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((len(jax.devices()),), (axis,))

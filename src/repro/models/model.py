@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ShapeConfig
 
 from . import encdec, transformer
@@ -208,7 +209,7 @@ def sharded_greedy(logits, ctx: ShardCtx):
         cand = jnp.where(m >= gm, a, jnp.int32(2**30))
         return jax.lax.pmin(cand, "model")  # lowest index among ties
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=P(None, "model"), out_specs=P(),
                        check_vma=False)
     return fn(logits)

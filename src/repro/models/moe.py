@@ -17,7 +17,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
 import numpy as np
+
+from repro.compat import shard_map
 
 from .layers import dense_init, pdtype
 
@@ -160,7 +163,7 @@ def _moe_apply_ep(p, x, cfg, ctx, data_ax, msize):
         y = jnp.zeros((T, D), xl.dtype).at[ftok_s].add(contrib)
         return y.reshape(Bl, Sl, D), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
         out_specs=(x_spec, P()),

@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis is
+absent, while example-based tests in the same module keep running.
+
+Usage::
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # degrade: decorators become skips
+    HAVE_HYPOTHESIS = False
+
+    class _Absorb:
+        """Swallows any strategy-building expression (st.lists(...).map(...))."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Absorb()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda fn: fn

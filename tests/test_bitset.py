@@ -1,6 +1,8 @@
 """Unit + property tests for the bit-packed itemset algebra."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skip without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitset import (MaskIndex, hash_rows, highest_bit_index,

@@ -3,7 +3,9 @@
 from itertools import combinations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.bitset import pack_itemsets, unpack_itemsets
 from repro.core.candidates import apriori_gen, join, non_apriori_gen, prune

@@ -3,7 +3,8 @@ claim), plus checkpoint/resume and straggler handling."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import ALGORITHMS, mine, sequential_apriori
 from repro.core.mapreduce import MapReduceRuntime

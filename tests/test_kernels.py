@@ -3,7 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.bitset import pack_itemsets
 from repro.kernels import support_count, support_count_ref

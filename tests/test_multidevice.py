@@ -57,11 +57,11 @@ def test_ep_moe_matches_single_device():
         from repro.models.moe import moe_init, moe_apply, _moe_apply_global
         from repro.models.model import ShardCtx
         from repro import sharding
+        from repro.compat import make_mesh
         cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", smoke=True),
                                   capacity_factor=8.0)
         p, _ = moe_init(jax.random.PRNGKey(0), cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         ctx = ShardCtx(mesh, sharding.make_rules())
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
                               jnp.float32).astype(jnp.bfloat16)
@@ -84,17 +84,16 @@ def test_elastic_reshard_8_to_4():
         from repro.train import init_train_state, save_checkpoint
         from repro.train.elastic import restore_elastic
         from repro import sharding
+        from repro.compat import make_mesh
         model = build_model(get_config("smollm-135m", smoke=True))
         opt = AdamWConfig()
         rules = sharding.make_rules()
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh8 = make_mesh((4, 2), ("data", "model"))
         state = init_train_state(model, opt, jax.random.PRNGKey(0), mesh8, rules)
         d = tempfile.mkdtemp()
         save_checkpoint(d, 5, state)
         # restore onto a DIFFERENT mesh (2x2 = "scale down to 4 devices")
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh4 = make_mesh((2, 2), ("data", "model"))
         tmpl = jax.tree.map(lambda x: x, state)
         state4, step = restore_elastic(d, model, opt, mesh4, rules, tmpl)
         assert step == 5
@@ -115,8 +114,8 @@ def test_mini_dryrun_multipod_codepath():
         from repro.models import build_model
         from repro import sharding
         from repro.launch.dryrun import build_step
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         rules = sharding.make_rules()
         model = build_model(get_config("smollm-135m", smoke=True))
         for shape in [ShapeConfig("t", 32, 8, "train"),
@@ -145,8 +144,8 @@ def test_2d_candidate_decomposition():
             row = np.where(rng.random(20) < 0.85, pat, rng.random(20) < 0.1)
             txns.append(np.nonzero(row)[0].tolist() or [0])
         oracle = sequential_apriori(txns, 0.3)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         rt = MapReduceRuntime(mesh=mesh, cand_axis="model")
         res = mine(txns, n_items=20, min_sup=0.3, algorithm="optimized_vfpc",
                    runtime=rt)
@@ -154,6 +153,34 @@ def test_2d_candidate_decomposition():
         print("2D_OK")
     """)
     assert "2D_OK" in out
+
+
+def test_2d_candidate_decomposition_narrow_shards():
+    """cand_axis wide enough that per-shard candidate counts are NOT a
+    multiple of 32 (256-row bucket / 16 shards = 16): the fused keep mask
+    must survive the shard concatenation (regression: per-shard bit-packing
+    padded each shard to a word boundary and corrupted the global mask)."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.core import mine, sequential_apriori
+        from repro.core.mapreduce import MapReduceRuntime
+        from repro.compat import make_mesh
+        rng = np.random.default_rng(9)
+        base = rng.random((4, 20)) < 0.4
+        txns = []
+        for _ in range(96):
+            pat = base[rng.integers(4)]
+            row = np.where(rng.random(20) < 0.85, pat, rng.random(20) < 0.1)
+            txns.append(np.nonzero(row)[0].tolist() or [0])
+        oracle = sequential_apriori(txns, 0.3)
+        mesh = make_mesh((1, 16), ("data", "model"))
+        rt = MapReduceRuntime(mesh=mesh, cand_axis="model", autotune=False)
+        res = mine(txns, n_items=20, min_sup=0.3, algorithm="optimized_vfpc",
+                   runtime=rt)
+        assert res.itemsets() == oracle
+        print("2D_NARROW_OK")
+    """, n_devices=16)
+    assert "2D_NARROW_OK" in out
 
 
 def test_balanced_shards_mining():
@@ -207,8 +234,8 @@ def test_decode_profile_parity():
             return np.stack(lgs)
 
         base = rollout(ShardCtx(None, None))
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = sharding.make_rules("decode")
         sharded = rollout(ShardCtx(mesh, rules))
         err = np.abs(base - sharded)[:, :, :cfg.vocab_size].max()

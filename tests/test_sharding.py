@@ -6,12 +6,12 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import sharding
+from repro.compat import make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh1d():
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), ("data",))
 
 
 def test_spec_basic(mesh1d):
