@@ -1,0 +1,118 @@
+"""Rule subsystem benchmark (DESIGN.md §6/§7): vectorized rule generation
+throughput and RuleServeEngine query serving, policy-fused vs per-batch.
+
+Writes ``BENCH_rules.json``: rules/s for generation, queries/s and per-query
+p50/p99 dispatch latency for the ``per_batch`` (SPC policy, one queued batch
+per dispatch) and ``policy_fused`` (Optimized-VFPC micro-batching) arms, plus
+an interpret-mode bit-exactness check of the Pallas containment kernel —
+tracked across PRs by CI.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import generate_ruleset, mine
+from repro.core.rules import generate_rules
+from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
+from repro.launch.serve_rules import make_queries
+from repro.serving import RuleServeEngine
+
+from .common import emit, write_json
+
+MIN_CONF = 0.6
+
+
+def _serve_arm(rules, batches, algorithm, n_queries, warm_to):
+    eng = RuleServeEngine(rules, top_k=5, algorithm=algorithm)
+    eng.warmup(warm_to)
+    t0 = time.perf_counter()
+    _, records = eng.serve(batches)
+    total = time.perf_counter() - t0
+    lat_ms = np.repeat([r.elapsed * 1e3 for r in records],
+                       [max(r.n_queries, 1) for r in records])
+    return {
+        "qps": round(n_queries / total, 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "dispatches": len(records),
+        "fused_dispatches": sum(1 for r in records if r.n_batches > 1),
+    }
+
+
+def run(fast: bool = False):
+    rows = []
+    record = {"backend": jax.default_backend()}
+    from repro.data import dataset_by_name
+    txns, n_items = dataset_by_name("mushroom", scale=0.08 if fast else 0.25)
+    res = mine(txns, n_items=n_items, min_sup=0.31)
+
+    # -- rule generation: vectorized enumeration + device metric pass ---------
+    generate_ruleset(res, min_confidence=MIN_CONF)          # warm (jit compile)
+    best = float("inf")
+    for _ in range(2 if fast else 3):
+        t0 = time.perf_counter()
+        rules = generate_ruleset(res, min_confidence=MIN_CONF)
+        best = min(best, time.perf_counter() - t0)
+    rules_per_s = len(rules) / max(best, 1e-9)
+    record["generation"] = {
+        "n_rules": len(rules), "gen_s": round(best, 4),
+        "rules_per_s": round(rules_per_s, 1),
+    }
+    rows.append((f"rules_gen/mushroom/conf={MIN_CONF}",
+                 round(best * 1e6, 1),
+                 f"n_rules={len(rules)} rules_per_s={rules_per_s:,.0f}"))
+
+    # decoded-view cost for context (per-rule host loop, not the hot path)
+    t0 = time.perf_counter()
+    generate_rules(res, min_confidence=MIN_CONF)
+    decode_s = time.perf_counter() - t0
+    record["generation"]["decode_s"] = round(decode_s, 4)
+
+    if len(rules) == 0:            # dataset/config drift: record, don't crash
+        rows.append(("rules/EMPTY", 0, f"no rules above conf={MIN_CONF}"))
+        write_json("BENCH_rules.json", record)
+        emit(rows, ["name", "us_per_call", "derived"])
+        return rows
+
+    # -- serving: policy-fused vs per-batch dispatch --------------------------
+    n_queries = 256 if fast else 2048
+    batch = 32
+    queries = make_queries(txns, n_queries, seed=1)
+    batches = [queries[i:i + batch] for i in range(0, len(queries), batch)]
+    warm_to = batch * 16
+    record["serving"] = {}
+    for arm, algo in (("per_batch", "spc"), ("policy_fused", "optimized_vfpc")):
+        stats = _serve_arm(rules, batches, algo, n_queries, warm_to)
+        record["serving"][arm] = stats
+        rows.append((f"rules_serve/{arm}/Q={n_queries}",
+                     round(1e6 / stats["qps"], 1),
+                     f"qps={stats['qps']} p50={stats['p50_ms']}ms "
+                     f"p99={stats['p99_ms']}ms dispatches={stats['dispatches']} "
+                     f"fused={stats['fused_dispatches']}"))
+    fused = record["serving"]["policy_fused"]["qps"]
+    per_batch = record["serving"]["per_batch"]["qps"]
+    record["serving"]["fused_speedup"] = round(fused / per_batch, 2)
+
+    # -- Pallas containment kernel: interpret-mode bit-exactness --------------
+    rng = np.random.default_rng(0)
+    sl = slice(0, min(len(rules), 64))
+    baskets = rules.ante_masks[rng.integers(0, len(rules), 32)]
+    ref = np.asarray(rule_scores_jnp(
+        rules.ante_masks[sl], rules.cons_masks[sl], rules.score[sl], baskets))
+    got = np.asarray(rule_scores_pallas(
+        rules.ante_masks[sl], rules.cons_masks[sl], rules.score[sl], baskets,
+        bq=8, br=128, interpret=True))
+    ok = bool((ref == got).all())
+    record["rules_pallas_interpret_valid"] = ok
+    rows.append(("rules_pallas/interpret_valid", int(ok),
+                 f"R={sl.stop} Q=32 matches_jnp={ok}"))
+
+    write_json("BENCH_rules.json", record)
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

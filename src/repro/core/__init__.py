@@ -4,11 +4,12 @@ from .bitset import pack_itemsets, unpack_itemsets, n_words, singleton_masks
 from .drivers import mine, MiningResult
 from .mapreduce import MapReduceRuntime
 from .policy import ALGORITHMS
-from .rules import Rule, generate_rules
+from .rules import Rule, RuleSet, generate_rules, generate_ruleset
 from .sequential import sequential_apriori
 
 __all__ = [
     "pack_itemsets", "unpack_itemsets", "n_words", "singleton_masks",
     "mine", "MiningResult", "MapReduceRuntime", "ALGORITHMS",
-    "Rule", "generate_rules", "sequential_apriori",
+    "Rule", "RuleSet", "generate_rules", "generate_ruleset",
+    "sequential_apriori",
 ]

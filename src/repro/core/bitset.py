@@ -151,21 +151,22 @@ class MaskIndex:
     def __init__(self, masks: np.ndarray):
         self.masks = np.asarray(masks, dtype=np.uint32)
         h = hash_rows(self.masks)
-        order = np.argsort(h, kind="stable")
-        self.sorted_hashes = h[order]
-        self.sorted_masks = self.masks[order]
+        self._order = np.argsort(h, kind="stable")
+        self.sorted_hashes = h[self._order]
+        self.sorted_masks = self.masks[self._order]
 
     def __len__(self) -> int:
         return self.masks.shape[0]
 
-    def contains(self, queries: np.ndarray) -> np.ndarray:
-        """Vectorized exact membership test → (Q,) bool."""
+    def find(self, queries: np.ndarray) -> np.ndarray:
+        """Vectorized exact lookup → (Q,) int64 row index into the original
+        ``masks`` array, or -1 where a query mask is absent."""
         queries = np.asarray(queries, dtype=np.uint32)
+        out = np.full(queries.shape[0], -1, dtype=np.int64)
         if len(self) == 0 or queries.shape[0] == 0:
-            return np.zeros(queries.shape[0], dtype=bool)
+            return out
         qh = hash_rows(queries)
         left = np.searchsorted(self.sorted_hashes, qh, side="left")
-        found = np.zeros(queries.shape[0], dtype=bool)
         pending = np.arange(queries.shape[0])
         offset = 0
         # Walk equal-hash runs; in practice the first probe resolves ~all rows.
@@ -180,10 +181,14 @@ class MaskIndex:
             if vpend.size == 0:
                 break
             eq = (self.sorted_masks[vpos] == queries[vpend]).all(axis=1)
-            found[vpend[eq]] = True
+            out[vpend[eq]] = self._order[vpos[eq]]
             pending = vpend[~eq]
             offset += 1
-        return found
+        return out
+
+    def contains(self, queries: np.ndarray) -> np.ndarray:
+        """Vectorized exact membership test → (Q,) bool."""
+        return self.find(queries) >= 0
 
 
 def vertical_pack(db_masks: np.ndarray, n_items: int) -> np.ndarray:

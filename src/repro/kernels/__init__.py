@@ -3,7 +3,9 @@
 from .autotune import tuned_blocks
 from .ops import support_count
 from .ref import support_count_ref
+from .rule_match import rule_scores_jnp, rule_scores_pallas
 from .vertical_count import vertical_count_jnp, vertical_count_pallas
 
 __all__ = ["support_count", "support_count_ref", "tuned_blocks",
+           "rule_scores_jnp", "rule_scores_pallas",
            "vertical_count_jnp", "vertical_count_pallas"]

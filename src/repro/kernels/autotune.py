@@ -39,6 +39,9 @@ DEFAULTS = {
     "vertical": {"block": 2048},
     "vertical_pallas": {"bt": 512},
     "vertical_pallas_interpret": {"bt": 512},
+    "rules_jnp": {"q_block": 1024},
+    "rules_pallas": {"bq": 256, "br": 512},
+    "rules_pallas_interpret": {"bq": 256, "br": 512},
 }
 
 CONFIGS = {
@@ -47,6 +50,9 @@ CONFIGS = {
                for bc, bt in ((128, 512), (256, 512), (256, 1024))],
     "vertical": [{"block": b} for b in (512, 2048, 8192)],
     "vertical_pallas": [{"bt": b} for b in (512, 1024, 2048)],
+    "rules_jnp": [{"q_block": b} for b in (256, 1024, 4096)],
+    "rules_pallas": [{"bq": bq, "br": br}
+                     for bq, br in ((128, 512), (256, 512), (256, 1024))],
 }
 
 # caps on the synthetic timing shapes: tuning must stay ≪ one counting job
@@ -148,6 +154,28 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
             def make(cfg):
                 return lambda: vertical_count_pallas(vdb, idx, bt=cfg["bt"])
         return make
+    if impl in ("rules_jnp", "rules_pallas"):
+        R = min(C, _CAP_C)             # rules play the candidate role
+        Q = min(T, _CAP_T_ROWS)        # baskets play the transaction role
+        antes = rng.integers(0, 2**32, (R, W), dtype=np.uint32)
+        cons = rng.integers(0, 2**32, (R, W), dtype=np.uint32) & ~antes
+        scores = jnp.asarray(rng.random(R, dtype=np.float32))
+        antes, cons = jnp.asarray(antes), jnp.asarray(cons)
+        baskets = jnp.asarray(rng.integers(0, 2**32, (Q, W), dtype=np.uint32))
+        if impl == "rules_jnp":
+            from .rule_match import rule_scores_jnp
+
+            def make(cfg):
+                qb = min(cfg["q_block"], Q)
+                return lambda: rule_scores_jnp(antes, cons, scores, baskets,
+                                               q_block=qb)
+        else:
+            from .rule_match import rule_scores_pallas
+
+            def make(cfg):
+                return lambda: rule_scores_pallas(antes, cons, scores, baskets,
+                                                  bq=cfg["bq"], br=cfg["br"])
+        return make
     raise ValueError(f"unknown impl {impl!r}")
 
 
@@ -169,7 +197,8 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     untunable = (
         impl not in CONFIGS
         or impl.endswith("interpret")
-        or (impl in ("pallas", "vertical_pallas") and backend != "tpu")
+        or (impl in ("pallas", "vertical_pallas", "rules_pallas")
+            and backend != "tpu")
         or os.environ.get("REPRO_AUTOTUNE", "1") == "0"
     )
     if untunable:

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: antecedent-containment rule scoring (DESIGN.md §7).
+
+Role-swapped reuse of the support-count subset test (§2/§3): rule antecedents
+play the candidates and query baskets play the transactions, but instead of
+reducing matches over the transaction axis the kernel emits the full masked
+score matrix
+
+    out[q, r] = score[r]  if ante[r] ⊆ basket[q]
+                          (and, with ``exclude_contained``, cons[r] ⊄ basket[q])
+                -inf      otherwise
+
+ready for a device-side ``lax.top_k`` per query.  The consequent-containment
+("nothing new to recommend") test rides in the same word loop, so novelty
+filtering costs one extra AND/compare per word instead of a second pass over
+the (Q, R) matrix.
+
+Tiling mirrors ``support_count.py``: rules tiled ``(BR, W)`` and baskets
+``(BQ, W)`` into VMEM, one ``(BQ, BR)`` float32 output tile per grid step, the
+word loop statically unrolled (W is tiny).  No accumulation across grid steps
+— every tile is written exactly once.  The blocked-jnp twin
+(:func:`rule_scores_jnp`, the CPU production path and bit-exactness oracle)
+scans basket chunks with the same select, so both paths produce identical
+float32 bits.  Block sizes are autotuned via ``kernels/autotune.py`` (§5)
+under the ``rules_jnp`` / ``rules_pallas`` impl keys.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 256       # baskets per tile (sublane dim)
+DEFAULT_BR = 512       # rules per tile (lane dim)
+DEFAULT_Q_BLOCK = 1024  # basket chunk of the jnp scan
+
+
+def _rule_scores_kernel(a_ref, c_ref, s_ref, b_ref, o_ref, *, n_words: int,
+                        exclude_contained: bool):
+    ok = None
+    bad = None
+    for w in range(n_words):  # static unroll, W is tiny
+        aw = a_ref[:, w][None, :]          # (1, BR)
+        bw = b_ref[:, w][:, None]          # (BQ, 1)
+        m = (aw & bw) == aw                # (BQ, BR) antecedent ⊆ basket
+        ok = m if ok is None else (ok & m)
+        if exclude_contained:
+            cw = c_ref[:, w][None, :]
+            mc = (cw & bw) == cw           # consequent ⊆ basket — nothing new
+            bad = mc if bad is None else (bad & mc)
+    if exclude_contained:
+        ok = ok & jnp.logical_not(bad)
+    o_ref[...] = jnp.where(ok, s_ref[...][None, :], -jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "br", "exclude_contained",
+                                    "interpret"))
+def rule_scores_pallas(antes: jax.Array, cons: jax.Array, scores: jax.Array,
+                       baskets: jax.Array, bq: int = DEFAULT_BQ,
+                       br: int = DEFAULT_BR, exclude_contained: bool = True,
+                       interpret: bool = False) -> jax.Array:
+    """Masked rule-score matrix via the Pallas kernel.
+
+    Args:
+      antes:   (R, W) uint32 antecedent bitmasks.
+      cons:    (R, W) uint32 consequent bitmasks (read only when
+               ``exclude_contained``).
+      scores:  (R,) float32 rank keys (confidence·lift).
+      baskets: (Q, W) uint32 query bitmasks.
+
+    Returns: (Q, R) float32 — ``scores[r]`` where rule r fires for basket q,
+    ``-inf`` elsewhere.
+
+    Rows are padded internally: pad rules get an empty antecedent (matches
+    everything) but a ``-inf`` score, and — with ``exclude_contained`` — an
+    empty consequent (contained in everything), so they can never surface;
+    pad baskets are sliced off before return.
+    """
+    R, W = antes.shape
+    Q, Wb = baskets.shape
+    assert W == Wb, (W, Wb)
+    pad_r = (-R) % br
+    if pad_r:
+        zrow = jnp.zeros((pad_r, W), antes.dtype)
+        antes = jnp.concatenate([antes, zrow], axis=0)
+        cons = jnp.concatenate([cons, zrow], axis=0)
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad_r,), -jnp.inf, scores.dtype)])
+    pad_q = (-Q) % bq
+    if pad_q:
+        baskets = jnp.concatenate(
+            [baskets, jnp.zeros((pad_q, W), baskets.dtype)], axis=0)
+    Rp, Qp = antes.shape[0], baskets.shape[0]
+    grid = (Qp // bq, Rp // br)
+    out = pl.pallas_call(
+        functools.partial(_rule_scores_kernel, n_words=W,
+                          exclude_contained=exclude_contained),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, W), lambda qi, ri: (ri, 0)),
+            pl.BlockSpec((br, W), lambda qi, ri: (ri, 0)),
+            pl.BlockSpec((br,), lambda qi, ri: (ri,)),
+            pl.BlockSpec((bq, W), lambda qi, ri: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, br), lambda qi, ri: (qi, ri)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Rp), jnp.float32),
+        interpret=interpret,
+    )(antes.astype(jnp.uint32), cons.astype(jnp.uint32),
+      scores.astype(jnp.float32), baskets.astype(jnp.uint32))
+    return out[:Q, :R]
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "exclude_contained"))
+def rule_scores_jnp(antes: jax.Array, cons: jax.Array, scores: jax.Array,
+                    baskets: jax.Array, q_block: int = DEFAULT_Q_BLOCK,
+                    exclude_contained: bool = True) -> jax.Array:
+    """Blocked jnp twin of :func:`rule_scores_pallas` (bit-exact agreement).
+
+    Scans basket chunks so peak memory is ``O(q_block · R · W)`` instead of
+    ``O(Q · R · W)``.
+    """
+    R, W = antes.shape
+    Q = baskets.shape[0]
+    antes = antes.astype(jnp.uint32)
+    cons = cons.astype(jnp.uint32)
+    scores = scores.astype(jnp.float32)
+    pad_q = (-Q) % q_block
+    if pad_q:
+        baskets = jnp.concatenate(
+            [baskets, jnp.zeros((pad_q, W), baskets.dtype)], axis=0)
+    chunks = baskets.astype(jnp.uint32).reshape(-1, q_block, W)
+
+    def body(_, blk):                       # blk: (q_block, W)
+        ok = jnp.all((antes[None, :, :] & blk[:, None, :]) == antes[None, :, :],
+                     axis=-1)
+        if exclude_contained:
+            ok &= jnp.logical_not(jnp.all(
+                (cons[None, :, :] & blk[:, None, :]) == cons[None, :, :],
+                axis=-1))
+        return None, jnp.where(ok, scores[None, :], -jnp.inf)
+
+    _, out = jax.lax.scan(body, None, chunks)
+    return out.reshape(-1, R)[:Q]

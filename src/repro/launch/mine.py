@@ -10,7 +10,7 @@ import argparse
 import json
 
 from repro.core import ALGORITHMS, mine
-from repro.core.mapreduce import MapReduceRuntime
+from repro.core.mapreduce import IMPLS, MapReduceRuntime
 from repro.data import dataset_by_name, load_transactions
 
 
@@ -25,7 +25,9 @@ def main():
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
-    ap.add_argument("--impl", default=None, help="jnp|pallas|pallas_interpret")
+    ap.add_argument("--impl", default="auto", choices=("auto", *IMPLS),
+                    help="counting impl (auto: pallas on TPU, vertical "
+                         "elsewhere)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -34,7 +36,7 @@ def main():
     else:
         txns, n_items = dataset_by_name(args.dataset, seed=args.seed,
                                         scale=args.scale)
-    runtime = MapReduceRuntime(impl=args.impl)
+    runtime = MapReduceRuntime(impl=None if args.impl == "auto" else args.impl)
     res = mine(txns, n_items=n_items, min_sup=args.min_sup,
                algorithm=args.algorithm, runtime=runtime,
                checkpoint_dir=args.checkpoint_dir)

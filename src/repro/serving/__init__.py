@@ -1,3 +1,7 @@
 from .engine import ServeEngine, ServePhaseRecord
+from .rules_engine import (Recommendation, RuleServeEngine, RuleServeRecord,
+                           RULE_IMPLS)
 
-__all__ = ["ServeEngine", "ServePhaseRecord"]
+__all__ = ["ServeEngine", "ServePhaseRecord",
+           "Recommendation", "RuleServeEngine", "RuleServeRecord",
+           "RULE_IMPLS"]

@@ -1,0 +1,297 @@
+"""Batched association-rule serving — the mine → rules → serve endgame
+(DESIGN.md §7).
+
+Incoming basket queries are bit-packed into transaction bitsets (§2) and
+matched against the :class:`~repro.core.rules.RuleSet`'s antecedents with the
+same word-parallel ``(c & t) == c`` containment test the counting kernels use
+— ``kernels/rule_match.py`` provides the Pallas variant and the blocked-jnp
+oracle, block sizes autotuned via ``kernels/autotune.py`` (§5).  Each dispatch
+emits the masked (Q, R) confidence·lift score matrix and reduces it with a
+device-side ``lax.top_k``; only the (Q, k) winners cross back to the host.
+
+Micro-batching: queued query batches are fused per dispatch by the same
+pass-combining ``Policy`` objects the mining drivers and the LM
+:class:`~repro.serving.engine.ServeEngine` share (``core/policy.py``).  The
+isomorphism: one dispatch answering ``npass`` queued batches is the serving
+analogue of one counting job covering ``npass`` Apriori levels — candidate
+count |C| maps to rule·query pairs scored, |L| to queries answered.  The SPC
+policy reproduces strict per-batch dispatch (the "unfused" benchmark arm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitset import n_words, pack_itemsets, unpack_itemsets
+from repro.core.policy import ALGORITHMS, PhaseStats
+from repro.core.rules import RuleSet
+from repro.kernels.autotune import DEFAULTS, _bucket, tuned_blocks
+from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
+
+RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+
+MIN_QUERY_BUCKET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Recommendation:
+    consequent: tuple       # item ids the rule recommends
+    confidence: float       # exact float64, from the RuleSet's integer counts
+    lift: float
+    score: float            # float32 confidence·lift rank key (device value)
+
+
+@dataclasses.dataclass
+class RuleServeRecord:
+    phase_idx: int
+    n_batches: int          # queued query batches fused into this dispatch
+    n_queries: int
+    elapsed: float
+
+
+def _bucket_rows(n: int, floor: int = MIN_QUERY_BUCKET) -> int:
+    """Power-of-two row bucket ≥ n — a handful of compiled query shapes.
+    Same rounding as the autotuner's shape buckets, floored for tiny batches."""
+    return max(floor, _bucket(n))
+
+
+class RuleServeEngine:
+    """Answer basket queries with top-k rule consequents by confidence·lift.
+
+    Args:
+      rules: a RuleSet from ``core.rules.generate_ruleset``.
+      top_k: default number of recommendations per query.
+      impl: "auto" | "jnp" | "pallas" | "pallas_interpret" — the containment
+        scoring path ("auto": pallas on TPU, jnp elsewhere; "pallas" off-TPU
+        degrades to interpret mode, like the counting kernels).
+      algorithm: pass-combining policy fusing queued query batches per
+        dispatch (core/policy.py; "spc" = strict per-batch dispatch).
+      max_fuse: cap on batches fused into one dispatch.
+      exclude_contained: drop rules whose consequent the basket already
+        contains (nothing new to recommend) — fused into the scoring kernel.
+      dedup_consequents: return k *distinct* consequents per query (several
+        rules can share one); the device top-k overfetches ``overfetch``×k
+        rule slots and the host decode keeps each consequent's best-scoring
+        hit.  False returns raw rule-level top-k.
+      overfetch: rule slots fetched per requested consequent when deduping
+        (clamped to the rule count; a bound, not a guarantee, when one
+        consequent dominates more than that many rules).
+      autotune: consult the block-size autotuner; False pins static defaults.
+    """
+
+    def __init__(self, rules: RuleSet, *, top_k: int = 5, impl: str = "auto",
+                 algorithm: str = "optimized_vfpc",
+                 policy_kwargs: dict | None = None, max_fuse: int = 16,
+                 exclude_contained: bool = True,
+                 dedup_consequents: bool = True, overfetch: int = 8,
+                 autotune: bool = True):
+        if impl not in RULE_IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; options: {RULE_IMPLS}")
+        if algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {algorithm!r}; options: {sorted(ALGORITHMS)}")
+        backend = jax.default_backend()
+        if impl == "auto":
+            impl = "pallas" if backend == "tpu" else "jnp"
+        self._interpret = (impl == "pallas_interpret"
+                           or (impl == "pallas" and backend != "tpu"))
+        self.impl = "pallas" if impl.startswith("pallas") else "jnp"
+        self.rules = rules
+        self.top_k = top_k
+        self.max_fuse = max_fuse
+        self.exclude_contained = exclude_contained
+        self.dedup_consequents = dedup_consequents
+        self.overfetch = max(int(overfetch), 1)
+        self.autotune = autotune
+        policy_cls, _ = ALGORITHMS[algorithm]
+        self.algorithm = algorithm
+        self.policy = policy_cls(**(policy_kwargs or {}))
+
+        self._W = n_words(rules.n_items)
+        self._d_ante = jnp.asarray(rules.ante_masks)
+        self._d_cons = jnp.asarray(rules.cons_masks)
+        self._d_scores = jnp.asarray(rules.score, jnp.float32)
+        # host decode: exact float64 metrics (vectorized) + a lazy per-index
+        # consequent-tuple cache — only rules top_k actually surfaces pay the
+        # host bit-walk, never all R of them
+        self._cons_cache: dict[int, tuple] = {}
+        _, self._conf64, self._lift64, _ = rules.exact_metrics()
+
+        self.records: list[RuleServeRecord] = []
+        self._jitted: dict = {}
+
+    @property
+    def n_rules(self) -> int:
+        return len(self.rules)
+
+    @property
+    def dispatches(self) -> int:
+        return len(self.records)
+
+    # -- jitted dispatch -------------------------------------------------------
+
+    def _blocks(self, impl_key: str, Qp: int) -> dict:
+        if not self.autotune:
+            return dict(DEFAULTS[impl_key])
+        return tuned_blocks(impl_key, C=max(self.n_rules, 1), T=Qp, W=self._W)
+
+    def _fn(self, Qp: int, k: int):
+        key = (Qp, k)
+        if key in self._jitted:
+            return self._jitted[key]
+        ante, cons, scores = self._d_ante, self._d_cons, self._d_scores
+        excl = self.exclude_contained
+        if self.impl == "jnp":
+            blocks = self._blocks("rules_jnp", Qp)
+            qb = min(blocks["q_block"], Qp)
+
+            def fn(baskets):
+                s = rule_scores_jnp(ante, cons, scores, baskets,
+                                    q_block=qb, exclude_contained=excl)
+                return jax.lax.top_k(s, k)
+        else:
+            impl_key = ("rules_pallas_interpret" if self._interpret
+                        else "rules_pallas")
+            blocks = self._blocks(impl_key, Qp)
+            interpret = self._interpret
+
+            def fn(baskets):
+                s = rule_scores_pallas(ante, cons, scores, baskets,
+                                       bq=blocks["bq"], br=blocks["br"],
+                                       exclude_contained=excl,
+                                       interpret=interpret)
+                return jax.lax.top_k(s, k)
+        self._jitted[key] = jax.jit(fn)
+        return self._jitted[key]
+
+    def _dispatch(self, packed: np.ndarray, k: int):
+        """(Q, W) packed baskets → host (Q, k) score values + rule indices."""
+        Q = packed.shape[0]
+        Qp = _bucket_rows(Q)
+        if Qp != Q:
+            packed = np.concatenate(
+                [packed, np.zeros((Qp - Q, self._W), np.uint32)], axis=0)
+        vals, idx = self._fn(Qp, k)(jnp.asarray(packed))
+        return np.asarray(vals)[:Q], np.asarray(idx)[:Q]
+
+    def warmup(self, max_queries: int, top_k: int | None = None):
+        """Pre-compile every pow2 query bucket up to ``max_queries`` (and run
+        the autotuner) so no dispatch in the serving loop pays compile cost."""
+        k = max(min(self.top_k if top_k is None else top_k, self.n_rules), 0)
+        if k == 0:
+            return
+        kf = min(k * self.overfetch, self.n_rules) if self.dedup_consequents else k
+        b = MIN_QUERY_BUCKET
+        while True:
+            self._dispatch(np.zeros((b, self._W), np.uint32), kf)
+            if b >= max_queries:
+                break
+            b *= 2
+
+    # -- host driver -----------------------------------------------------------
+
+    def _pack(self, baskets) -> np.ndarray:
+        """Item-id baskets → (Q, W) uint32 bitsets; unknown ids are ignored."""
+        n = self.rules.n_items
+        clean = [[i for i in b if 0 <= i < n] for b in baskets]
+        return pack_itemsets(clean, n)
+
+    def _cons_tuple(self, r: int) -> tuple:
+        if r not in self._cons_cache:
+            self._cons_cache[r] = unpack_itemsets(
+                self.rules.cons_masks[r:r + 1])[0]
+        return self._cons_cache[r]
+
+    def _decode(self, vals: np.ndarray, idx: np.ndarray, k: int):
+        dedup = self.dedup_consequents
+        out = []
+        for q in range(vals.shape[0]):
+            recs = []
+            seen: set = set()
+            for j in range(vals.shape[1]):
+                # -inf is the kernel's no-match sentinel; +inf is a legal score
+                # (legacy missing-consequent lift) and must decode normally
+                if np.isneginf(vals[q, j]) or len(recs) >= k:
+                    break
+                r = int(idx[q, j])
+                cons = self._cons_tuple(r)
+                if dedup:
+                    if cons in seen:
+                        continue    # a lower-scored rule for the same consequent
+                    seen.add(cons)
+                recs.append(Recommendation(
+                    cons, float(self._conf64[r]), float(self._lift64[r]),
+                    float(vals[q, j])))
+            out.append(recs)
+        return out
+
+    def serve(self, batches, top_k: int | None = None):
+        """Answer a queue of basket batches with policy-fused dispatches.
+
+        Args:
+          batches: sequence of batches; each batch is a list of baskets
+            (iterables of item ids).
+          top_k: recommendations per query (default: engine top_k).
+
+        Returns ``(results, records)`` — ``results[b][q]`` is the list of
+        :class:`Recommendation` for basket ``q`` of batch ``b``, and
+        ``records`` the per-dispatch :class:`RuleServeRecord` trace (also kept
+        on ``self.records``).
+        """
+        k = max(min(self.top_k if top_k is None else top_k, self.n_rules), 0)
+        batches = list(batches)
+        results: list = []
+        records: list[RuleServeRecord] = []
+        history: list[PhaseStats] = []
+        if self.n_rules == 0 or k == 0:       # no rules: everything is empty
+            results = [[[] for _ in b] for b in batches]
+            self.records = records
+            return results, records
+
+        i, phase_idx = 0, 0
+        while i < len(batches):
+            prev = history[-1] if history else None
+            prev2 = history[-2] if len(history) > 1 else None
+            mode, val = self.policy.decide(prev, prev2)
+            if mode == "width":
+                nfuse = int(val)
+            else:  # budget_alpha: fuse ⌊α⌋ queued batches (α=1 ⇒ per-batch,
+                   # matching the drivers' "no widening" baseline semantics)
+                nfuse = int(np.floor(val))
+            nfuse = max(1, min(nfuse, self.max_fuse, len(batches) - i))
+            group = batches[i:i + nfuse]
+            sizes = [len(b) for b in group]
+            flat = [basket for batch in group for basket in batch]
+
+            t0 = time.perf_counter()
+            if flat:
+                kf = (min(k * self.overfetch, self.n_rules)
+                      if self.dedup_consequents else k)
+                vals, idx = self._dispatch(self._pack(flat), kf)
+                decoded = self._decode(vals, idx, k)
+            else:
+                decoded = []
+            elapsed = time.perf_counter() - t0
+
+            off = 0
+            for sz in sizes:
+                results.append(decoded[off:off + sz])
+                off += sz
+            n_q = len(flat)
+            history.append(PhaseStats(self.n_rules * max(n_q, 1),
+                                      max(n_q, 1), elapsed))
+            records.append(RuleServeRecord(phase_idx, nfuse, n_q, elapsed))
+            i += nfuse
+            phase_idx += 1
+        self.records = records
+        return results, records
+
+    def query(self, baskets, top_k: int | None = None):
+        """Single-batch convenience: recommendations for one list of baskets."""
+        results, _ = self.serve([list(baskets)], top_k=top_k)
+        return results[0]

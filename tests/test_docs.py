@@ -1,0 +1,87 @@
+"""Docs consistency: DESIGN.md §-references and README quickstart commands.
+
+Module docstrings across the repo cite architecture sections as
+``DESIGN.md §N``; this gate fails when a cited section does not exist, and
+when a README command names a module or script that is not in the tree —
+so the docs cannot silently rot as the code moves.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _py_files():
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        yield from (ROOT / sub).rglob("*.py")
+
+
+def _design_sections():
+    text = (ROOT / "DESIGN.md").read_text()
+    return {int(m) for m in re.findall(r"(?m)^## §(\d+)", text)}
+
+
+def test_design_section_references_exist():
+    sections = _design_sections()
+    assert sections, "DESIGN.md has no '## §N' sections"
+    missing = []
+    for path in _py_files():
+        for n in re.findall(r"DESIGN\.md §(\d+)", path.read_text()):
+            if int(n) not in sections:
+                missing.append((str(path.relative_to(ROOT)), int(n)))
+    assert not missing, (
+        f"dangling DESIGN.md § references (existing: {sorted(sections)}): "
+        f"{missing}")
+
+
+def test_design_references_from_markdown():
+    """README/CHANGES §-citations must resolve too."""
+    sections = _design_sections()
+    for name in ("README.md", "CHANGES.md"):
+        text = (ROOT / name).read_text()
+        for n in re.findall(r"DESIGN\.md[^#\n]{0,20}§(\d+)", text):
+            assert int(n) in sections, f"{name} cites missing DESIGN.md §{n}"
+
+
+def test_readme_exists_and_commands_resolve():
+    readme = ROOT / "README.md"
+    assert readme.exists(), "top-level README.md is required"
+    text = readme.read_text()
+
+    # `python -m pkg.mod` → src/pkg/mod.py or <repo>/pkg/mod.py (namespace pkg)
+    mods = {m for m in re.findall(r"python -m ([A-Za-z0-9_.]+)", text)
+            if m.split(".")[0] in ("repro", "benchmarks")}  # ours, not pytest
+    assert mods, "README quickstart should show `python -m ...` commands"
+    for mod in mods:
+        rel = Path(*mod.split("."))
+        candidates = [ROOT / "src" / rel.with_suffix(".py"),
+                      ROOT / "src" / rel / "__init__.py",
+                      ROOT / rel.with_suffix(".py"),
+                      ROOT / rel / "__init__.py"]
+        assert any(c.exists() for c in candidates), \
+            f"README references `python -m {mod}` but no such module exists"
+
+    # `python path/to/script.py` → the script must exist
+    for script in re.findall(r"python ((?:examples|benchmarks)/[\w/]+\.py)", text):
+        assert (ROOT / script).exists(), \
+            f"README references `python {script}` but the file is missing"
+
+
+def test_readme_mentions_tracked_benchmarks():
+    text = (ROOT / "README.md").read_text()
+    for record in ("BENCH_exec_time.json", "BENCH_kernels.json",
+                   "BENCH_rules.json"):
+        assert record in text, f"README should cite {record} headline numbers"
+        assert (ROOT / record).exists(), f"{record} missing from repo root"
+
+
+@pytest.mark.parametrize("surface", [
+    "repro.launch.mine", "repro.launch.serve_rules",
+    "examples/quickstart.py", "examples/recommend.py",
+])
+def test_quickstart_surfaces_in_readme(surface):
+    """The documented entry points stay documented."""
+    assert surface in (ROOT / "README.md").read_text()

@@ -5,8 +5,12 @@ from itertools import combinations
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, settings, st
+
 from repro.core import mine, sequential_apriori
-from repro.core.rules import generate_rules
+from repro.core.bitset import pack_itemsets
+from repro.core.drivers import MiningResult
+from repro.core.rules import generate_rules, generate_ruleset
 
 
 def brute_rules(levels, n_txns, min_conf):
@@ -65,3 +69,78 @@ def test_rules_support_consistency(mined):
     for r in generate_rules(res, min_confidence=0.8, max_rules=20):
         union = tuple(sorted(set(r.antecedent) | set(r.consequent)))
         assert oracle[len(union)][union] == round(r.support * res.n_txns)
+
+
+def test_ruleset_arrays_match_bruteforce(mined):
+    """Vectorized RuleSet counts + float32 device metrics vs the oracle."""
+    res, oracle = mined
+    sup = {}
+    for d in oracle.values():
+        sup.update(d)
+    rs = generate_ruleset(res, min_confidence=0.7)
+    assert len(rs) > 0
+    n = res.n_txns
+    from repro.core.bitset import unpack_itemsets
+    antes = unpack_itemsets(rs.ante_masks)
+    conss = unpack_itemsets(rs.cons_masks)
+    for i in range(len(rs)):
+        union = tuple(sorted(set(antes[i]) | set(conss[i])))
+        assert set(antes[i]) & set(conss[i]) == set()
+        assert rs.union_counts[i] == sup[union]
+        assert rs.ante_counts[i] == sup[antes[i]]
+        assert rs.cons_counts[i] == sup[conss[i]]
+        conf = sup[union] / sup[antes[i]]
+        lift = conf * n / sup[conss[i]]
+        lev = sup[union] / n - (sup[antes[i]] / n) * (sup[conss[i]] / n)
+        np.testing.assert_allclose(rs.confidence[i], conf, rtol=1e-6)
+        np.testing.assert_allclose(rs.lift[i], lift, rtol=1e-6)
+        np.testing.assert_allclose(rs.leverage[i], lev, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(rs.score[i],
+                                   np.float32(rs.confidence[i]) *
+                                   np.float32(rs.lift[i]), rtol=1e-6)
+    # rank order is (confidence, lift) descending on the exact metrics
+    _, conf64, lift64, _ = rs.exact_metrics()
+    keys = list(zip(-conf64, -lift64))
+    assert keys == sorted(keys)
+
+
+def result_from_oracle(txns, n_items, min_sup):
+    """MiningResult built straight from the sequential oracle's levels —
+    lets rule-layer property tests skip the miner entirely."""
+    levels_dict = sequential_apriori(txns, min_sup)
+    levels = {}
+    for k, d in levels_dict.items():
+        if not d:
+            continue
+        keys = sorted(d)
+        levels[k] = (pack_itemsets(keys, n_items),
+                     np.array([d[t] for t in keys], np.int64))
+    return MiningResult(algorithm="oracle", min_sup=min_sup, n_txns=len(txns),
+                        n_items=n_items, levels=levels, phases=[],
+                        total_seconds=0.0, dispatches=0, compiles=0)
+
+
+@given(st.lists(st.lists(st.integers(0, 7), min_size=1, max_size=6)
+                .map(lambda x: sorted(set(x))), min_size=4, max_size=25),
+       st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_rule_metrics_invariant_under_relabeling(txn_sets, perm_seed):
+    """Property: relabeling the item catalog permutes rules but leaves every
+    metric (support/confidence/lift/leverage) unchanged."""
+    n_items = 8
+    perm = np.random.default_rng(perm_seed).permutation(n_items)
+    relabeled = [sorted(int(perm[i]) for i in t) for t in txn_sets]
+
+    def key_set(txns):
+        res = result_from_oracle(txns, n_items, min_sup=0.3)
+        return {(r.antecedent, r.consequent,
+                 round(r.support, 9), round(r.confidence, 9),
+                 round(r.lift, 9), round(r.leverage, 9))
+                for r in generate_rules(res, min_confidence=0.5)}
+
+    def relabel(rule_key):
+        a, c, *metrics = rule_key
+        return (tuple(sorted(int(perm[i]) for i in a)),
+                tuple(sorted(int(perm[i]) for i in c)), *metrics)
+
+    assert {relabel(k) for k in key_set(txn_sets)} == key_set(relabeled)

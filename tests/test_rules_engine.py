@@ -1,0 +1,139 @@
+"""RuleServeEngine: brute-force top-k agreement, jnp vs Pallas-interpret
+bit-exactness, and policy-fused vs per-batch dispatch equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core import generate_ruleset, mine
+from repro.core.bitset import pack_itemsets
+from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
+from repro.serving import RuleServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(7)
+    base = rng.random((3, 12)) < 0.5
+    txns = []
+    for _ in range(120):
+        pat = base[rng.integers(3)]
+        row = np.where(rng.random(12) < 0.85, pat, rng.random(12) < 0.1)
+        txns.append(np.nonzero(row)[0].tolist() or [0])
+    res = mine(txns, n_items=12, min_sup=0.3)
+    rules = generate_ruleset(res, min_confidence=0.6)
+    assert len(rules) > 5
+    baskets = [sorted(set(t[:-1])) or [0] for t in txns[:40]]
+    return rules, baskets
+
+
+def brute_matches(rules, basket, exclude_contained=True):
+    """Rule indices firing for a basket, best score first (index-stable)."""
+    from repro.core.bitset import unpack_itemsets
+    antes = unpack_itemsets(rules.ante_masks)
+    conss = unpack_itemsets(rules.cons_masks)
+    b = set(basket)
+    hits = [i for i in range(len(rules))
+            if set(antes[i]) <= b
+            and not (exclude_contained and set(conss[i]) <= b)]
+    return sorted(hits, key=lambda i: (-rules.score[i], i)), conss
+
+
+def test_engine_matches_bruteforce(setup):
+    rules, baskets = setup
+    eng = RuleServeEngine(rules, impl="jnp", dedup_consequents=False)
+    recs = eng.query(baskets, top_k=len(rules))
+    for basket, got in zip(baskets, recs):
+        hits, conss = brute_matches(rules, basket)
+        want = [(conss[i], np.float32(rules.score[i])) for i in hits]
+        assert [(r.consequent, np.float32(r.score)) for r in got] == want
+
+
+def test_engine_dedups_consequents(setup):
+    rules, baskets = setup
+    eng = RuleServeEngine(rules, impl="jnp", top_k=3)
+    for got, basket in zip(eng.query(baskets), baskets):
+        conss = [r.consequent for r in got]
+        assert len(set(conss)) == len(conss)
+        assert len(conss) <= 3
+        scores = [r.score for r in got]
+        assert scores == sorted(scores, reverse=True)
+        for r in got:    # novelty: never recommend what's already there
+            assert not set(r.consequent) <= set(basket)
+
+
+def test_kernel_paths_bit_exact(setup):
+    rules, baskets = setup
+    packed = pack_itemsets(baskets, rules.n_items)
+    for excl in (True, False):
+        ref = np.asarray(rule_scores_jnp(
+            rules.ante_masks, rules.cons_masks, rules.score, packed,
+            q_block=16, exclude_contained=excl))
+        pal = np.asarray(rule_scores_pallas(
+            rules.ante_masks, rules.cons_masks, rules.score, packed,
+            bq=16, br=32, exclude_contained=excl, interpret=True))
+        np.testing.assert_array_equal(ref, pal)
+
+
+def test_engine_impls_agree_exactly(setup):
+    rules, baskets = setup
+    a = RuleServeEngine(rules, impl="jnp").query(baskets)
+    b = RuleServeEngine(rules, impl="pallas_interpret").query(baskets)
+    assert a == b
+
+
+def test_fused_vs_per_batch_equivalence(setup):
+    rules, baskets = setup
+    batches = [baskets[i:i + 5] for i in range(0, len(baskets), 5)]
+    spc = RuleServeEngine(rules, impl="jnp", algorithm="spc")
+    fused = RuleServeEngine(rules, impl="jnp", algorithm="optimized_vfpc")
+    r_spc, rec_spc = spc.serve(batches)
+    r_fused, rec_fused = fused.serve(batches)
+    assert r_spc == r_fused
+    assert all(r.n_batches == 1 for r in rec_spc)
+    assert len(rec_spc) == len(batches)
+    assert any(r.n_batches > 1 for r in rec_fused)       # policy actually fuses
+    assert len(rec_fused) < len(batches)
+    assert sum(r.n_queries for r in rec_fused) == len(baskets)
+
+
+def test_unknown_items_and_empty_baskets(setup):
+    rules, _ = setup
+    recs = eng_recs = RuleServeEngine(rules, impl="jnp").query(
+        [[], [999, 10_000], [0, 1, 2, 999]])
+    assert recs[0] == [] and recs[1] == []      # nothing known → nothing fires
+    # unknown ids are ignored, known prefix still answered like [0, 1, 2]
+    clean = RuleServeEngine(rules, impl="jnp").query([[0, 1, 2]])
+    assert eng_recs[2] == clean[0]
+
+
+def test_top_k_zero_returns_nothing(setup):
+    rules, baskets = setup
+    recs = RuleServeEngine(rules, impl="jnp").query(baskets[:3], top_k=0)
+    assert recs == [[], [], []]
+
+
+def test_inf_score_rules_still_decode(setup):
+    """+inf scores (legacy missing-consequent lift) are legal rank keys; only
+    -inf is the kernel's no-match sentinel."""
+    import dataclasses
+    rules, baskets = setup
+    boosted = dataclasses.replace(
+        rules, score=np.where(np.arange(len(rules)) == 0, np.inf,
+                              rules.score).astype(np.float32))
+    recs = RuleServeEngine(boosted, impl="jnp", dedup_consequents=False).query(
+        baskets, top_k=3)
+    hits, _ = brute_matches(rules, baskets[0])
+    if 0 in hits:      # the boosted rule fires → it must rank first, not hide
+        assert recs[0][0].score == np.inf
+    assert any(len(r) > 0 for r in recs)
+
+
+def test_empty_ruleset_serves_empty():
+    from repro.core.drivers import MiningResult
+    res = MiningResult(algorithm="spc", min_sup=0.9, n_txns=4, n_items=8,
+                       levels={}, phases=[], total_seconds=0.0,
+                       dispatches=0, compiles=0)
+    rules = generate_ruleset(res)
+    assert len(rules) == 0
+    results, records = RuleServeEngine(rules, impl="jnp").serve([[[0, 1]]])
+    assert results == [[[]]] and records == []
