@@ -18,6 +18,7 @@ from repro.core.rules import generate_rules
 from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
 from repro.launch.serve_rules import make_queries
 from repro.serving import RuleServeEngine
+from repro.serving.common import latency_percentiles
 
 from .common import emit, write_json
 
@@ -30,12 +31,11 @@ def _serve_arm(rules, batches, algorithm, n_queries, warm_to):
     t0 = time.perf_counter()
     _, records = eng.serve(batches)
     total = time.perf_counter() - t0
-    lat_ms = np.repeat([r.elapsed * 1e3 for r in records],
-                       [max(r.n_queries, 1) for r in records])
+    lat = latency_percentiles(records)
     return {
         "qps": round(n_queries / total, 1),
-        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
-        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "p50_ms": round(lat["p50_ms"], 3),
+        "p99_ms": round(lat["p99_ms"], 3),
         "dispatches": len(records),
         "fused_dispatches": sum(1 for r in records if r.n_batches > 1),
     }

@@ -1,0 +1,121 @@
+"""Streaming subsystem benchmark (DESIGN.md §6/§8): steady-state update
+throughput, O(delta) counting vs full recount, and live rule-refresh latency.
+
+Writes ``BENCH_stream.json``: updates/s and per-update latency percentiles
+for a sliding-window stream in micro-batches, the measured speedup of one
+signed delta-counting dispatch over a full device-resident recount of the
+same tracked candidates, and p50/p99 of the RuleSet regeneration + atomic
+engine swap — tracked across PRs by CI.
+"""
+
+import collections
+import time
+
+import jax
+import numpy as np
+
+from repro.data import dataset_by_name
+from repro.kernels import delta_count, support_count
+from repro.stream import StreamMiner
+
+from .common import emit, write_json
+
+MIN_SUP = 0.4
+
+
+def _best_of(fn, reps=3):
+    best = float("inf")
+    fn()                                   # warm-up (compile)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(fn())                   # sync to host
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = False):
+    rows = []
+    record = {"backend": jax.default_backend()}
+    scale = 0.12 if fast else 0.3
+    capacity = 512 if fast else 1024
+    batch = 16
+    n_updates = 24 if fast else 64
+    txns, n_items = dataset_by_name("mushroom", scale=scale)
+
+    miner = StreamMiner(n_items, MIN_SUP, capacity=capacity, mode="sliding")
+    fill = min(len(txns), capacity)
+    rec0 = miner.push(txns[:fill])
+    record["prefill"] = {
+        "window": rec0.window_size, "n_frequent": rec0.n_frequent,
+        "n_rules": rec0.n_rules, "seconds": round(rec0.update_seconds, 3),
+    }
+
+    # -- steady-state streaming updates ---------------------------------------
+    paths: collections.Counter = collections.Counter()
+    t0 = time.perf_counter()
+    for u in range(n_updates):
+        lo = (fill + u * batch) % max(len(txns) - batch, 1)
+        paths[miner.push(txns[lo:lo + batch]).path] += 1
+    total = time.perf_counter() - t0
+
+    ups = miner.updates[1:]
+    upd_ms = np.array([r.update_seconds * 1e3 for r in ups])
+    refresh_ms = np.array([r.refresh_seconds * 1e3 for r in ups
+                           if r.levels_changed])
+    record["updates"] = {
+        "n_updates": n_updates, "batch": batch,
+        "updates_per_s": round(n_updates / total, 2),
+        "txns_per_s": round(n_updates * batch / total, 1),
+        "paths": dict(paths), "n_remines": miner.n_remines - 1,
+        "p50_ms": round(float(np.percentile(upd_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(upd_ms, 99)), 3),
+        "n_tracked": miner.n_tracked,
+        "n_frequent": miner.n_frequent,
+    }
+    rows.append((f"stream_updates/mushroom/B={batch}",
+                 round(total / n_updates * 1e6, 1),
+                 f"updates_per_s={record['updates']['updates_per_s']} "
+                 f"paths={dict(paths)}"))
+
+    # -- rule refresh latency -------------------------------------------------
+    record["rule_refresh"] = {
+        "n_refreshes": int(refresh_ms.size),
+        "p50_ms": round(float(np.percentile(refresh_ms, 50)), 3)
+        if refresh_ms.size else 0.0,
+        "p99_ms": round(float(np.percentile(refresh_ms, 99)), 3)
+        if refresh_ms.size else 0.0,
+    }
+    rows.append(("stream_rule_refresh",
+                 record["rule_refresh"]["p50_ms"] * 1e3,
+                 f"refreshes={refresh_ms.size} "
+                 f"p50={record['rule_refresh']['p50_ms']}ms "
+                 f"p99={record['rule_refresh']['p99_ms']}ms"))
+
+    # -- delta counting vs full recount of the same tracked candidates -------
+    tracked = miner._tables.cat_padded
+    contents = miner.window.contents()         # a representative slab: one
+    added, evicted = contents[-batch:], contents[:batch]   # batch in/out
+    dev_window = miner.window.device_masks()   # device-resident full window
+    t_delta = _best_of(lambda: delta_count(tracked, added, evicted))
+    t_full = _best_of(lambda: support_count(tracked, dev_window))
+    speedup = t_full / max(t_delta, 1e-9)
+    record["delta_vs_recount"] = {
+        "n_tracked": int(tracked.shape[0]),
+        "window": miner.window.size, "slab": int(added.shape[0]
+                                                 + evicted.shape[0]),
+        "delta_ms": round(t_delta * 1e3, 3),
+        "recount_ms": round(t_full * 1e3, 3),
+        "speedup": round(speedup, 2),
+    }
+    rows.append((f"stream_delta_vs_recount/C={tracked.shape[0]}",
+                 round(t_delta * 1e6, 1),
+                 f"delta={t_delta*1e3:.2f}ms recount={t_full*1e3:.2f}ms "
+                 f"speedup={speedup:.1f}x"))
+
+    write_json("BENCH_stream.json", record)
+    emit(rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,7 +10,7 @@ import time
 
 from . import (bench_candidates, bench_decode_fusion, bench_exec_time,
                bench_kernels, bench_lk_counts, bench_phase_breakdown,
-               bench_rules, bench_scalability, bench_speedup)
+               bench_rules, bench_scalability, bench_speedup, bench_stream)
 
 SUITES = {
     "exec_time": bench_exec_time,          # Figs. 2-4
@@ -22,11 +22,12 @@ SUITES = {
     "decode_fusion": bench_decode_fusion,  # beyond-paper serving fusion
     "kernels": bench_kernels,              # Pallas/counting microbench
     "rules": bench_rules,                  # rule generation + serving (§7)
+    "stream": bench_stream,                # streaming incremental mining (§8)
 }
 
 
-# the CI pass: pipeline A/B + kernels + rule subsystem
-SMOKE_SUITES = ("exec_time", "kernels", "rules")
+# the CI pass: pipeline A/B + kernels + rule subsystem + streaming
+SMOKE_SUITES = ("exec_time", "kernels", "rules", "stream")
 
 
 def main() -> None:

@@ -1,0 +1,66 @@
+"""Guided tour: streaming incremental mining with live rule refresh.
+
+  PYTHONPATH=src python examples/stream_mine.py
+
+A market-basket stream flows through a sliding window: the StreamMiner keeps
+the frequent itemsets *exact* at every step with O(delta) signed counting
+(DESIGN.md §8), falls back to a full policy-driven re-mine when the itemset
+structure drifts, and atomically swaps fresh association rules into the live
+serving engine — so the recommendations below change as the stream's tastes
+change, without ever re-loading the dataset.
+"""
+
+import numpy as np
+
+from repro.core import mine
+from repro.data import mushroom_like
+from repro.stream import StreamMiner
+from repro.stream.tables import levels_equal
+
+
+def main():
+    txns, n_items = mushroom_like(n_txns=1200, seed=5)
+    rng = np.random.default_rng(5)
+
+    miner = StreamMiner(n_items, min_sup=0.4, capacity=512, mode="sliding",
+                        min_confidence=0.7, serve_kwargs={"top_k": 3})
+
+    print("== prefill: first 512 transactions ==")
+    rec = miner.push(txns[:512])
+    print(f"  {rec.path}: {rec.n_frequent} frequent itemsets, "
+          f"{rec.n_rules} rules in {rec.update_seconds:.2f}s")
+
+    basket = list(txns[0][:-2])
+    print(f"\nlive basket {basket[:6]}... recommends:")
+    for r in miner.query([basket])[0]:
+        print(f"  {r.consequent} (conf={r.confidence:.3f} lift={r.lift:.2f})")
+
+    print("\n== stream 16 micro-batches of 16 ==")
+    for u in range(16):
+        lo = 512 + u * 16
+        rec = miner.push(txns[lo:lo + 16])
+        tag = "rules refreshed" if rec.levels_changed else "unchanged"
+        print(f"  update {rec.seq:2d} [{rec.path:8s}] window={rec.window_size} "
+              f"frequent={rec.n_frequent} rules={rec.n_rules} ({tag})")
+
+    print("\n== shift the distribution (drop an attribute) ==")
+    shifted = [[i for i in t if i >= 2] for t in txns[700:900]]
+    for u in range(4):
+        rec = miner.push(shifted[u * 32:(u + 1) * 32])
+        print(f"  update {rec.seq:2d} [{rec.path:17s}] "
+              f"frequent={rec.n_frequent} rules={rec.n_rules}")
+
+    print("\nafter the shift, the same basket recommends:")
+    for r in miner.query([basket])[0]:
+        print(f"  {r.consequent} (conf={r.confidence:.3f} lift={r.lift:.2f})")
+
+    # the equivalence oracle: incremental state == from-scratch mine, exactly
+    scratch = mine(db_masks=miner.window.contents(), n_items=n_items,
+                   min_sup=0.4)
+    assert levels_equal(miner.levels, scratch.levels)
+    print("\nincremental state verified byte-identical to a from-scratch mine "
+          f"({miner.n_remines} re-mines across {len(miner.updates)} updates)")
+
+
+if __name__ == "__main__":
+    main()

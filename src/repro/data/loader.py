@@ -31,13 +31,17 @@ def load_transactions(path: str) -> tuple[list[list[int]], int]:
 
 
 def dataset_stats(transactions, n_items: int) -> dict:
+    if len(transactions) == 0:
+        # streaming windows are routinely empty; zero stats, no NaN/ValueError
+        return {"n_txns": 0, "n_items": n_items, "avg_width": 0.0,
+                "max_width": 0, "density": 0.0}
     widths = np.array([len(t) for t in transactions])
     return {
         "n_txns": len(transactions),
         "n_items": n_items,
         "avg_width": float(widths.mean()),
         "max_width": int(widths.max()),
-        "density": float(widths.mean() / n_items),
+        "density": float(widths.mean() / n_items) if n_items else 0.0,
     }
 
 

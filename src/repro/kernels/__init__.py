@@ -1,11 +1,13 @@
 """Pallas TPU kernels for the counting hot-spot (+ jnp oracles and wrappers)."""
 
 from .autotune import tuned_blocks
+from .delta_count import delta_count, delta_count_jnp, delta_count_pallas
 from .ops import support_count
 from .ref import support_count_ref
 from .rule_match import rule_scores_jnp, rule_scores_pallas
 from .vertical_count import vertical_count_jnp, vertical_count_pallas
 
 __all__ = ["support_count", "support_count_ref", "tuned_blocks",
+           "delta_count", "delta_count_jnp", "delta_count_pallas",
            "rule_scores_jnp", "rule_scores_pallas",
            "vertical_count_jnp", "vertical_count_pallas"]

@@ -42,6 +42,9 @@ DEFAULTS = {
     "rules_jnp": {"q_block": 1024},
     "rules_pallas": {"bq": 256, "br": 512},
     "rules_pallas_interpret": {"bq": 256, "br": 512},
+    "delta_jnp": {"txn_block": 1024},
+    "delta_pallas": {"bc": 256, "bt": 256},
+    "delta_pallas_interpret": {"bc": 256, "bt": 256},
 }
 
 CONFIGS = {
@@ -53,6 +56,9 @@ CONFIGS = {
     "rules_jnp": [{"q_block": b} for b in (256, 1024, 4096)],
     "rules_pallas": [{"bq": bq, "br": br}
                      for bq, br in ((128, 512), (256, 512), (256, 1024))],
+    "delta_jnp": [{"txn_block": b} for b in (256, 1024, 4096)],
+    "delta_pallas": [{"bc": bc, "bt": bt}
+                     for bc, bt in ((128, 256), (256, 256), (256, 512))],
 }
 
 # caps on the synthetic timing shapes: tuning must stay ≪ one counting job
@@ -154,6 +160,31 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
             def make(cfg):
                 return lambda: vertical_count_pallas(vdb, idx, bt=cfg["bt"])
         return make
+    if impl in ("delta_jnp", "delta_pallas"):
+        C = min(C, _CAP_C)
+        T = min(T, _CAP_T_ROWS)       # slab rows (added + evicted)
+        cands = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
+        txns = jnp.asarray(rng.integers(0, 2**32, (T, W), dtype=np.uint32))
+        signs = jnp.asarray(rng.choice(np.array([-1, 1], np.int32), T))
+        if impl == "delta_jnp":
+            from .delta_count import delta_count_jnp
+
+            def make(cfg):
+                blk = min(cfg["txn_block"], T)
+                return lambda: delta_count_jnp(cands, txns, signs, block=blk)
+        else:
+            from .delta_count import delta_count_pallas
+
+            def make(cfg):
+                bc = min(cfg["bc"], C)
+                bt = cfg["bt"]
+                tp = T + ((-T) % bt)
+                tx = jnp.concatenate(
+                    [txns, jnp.zeros((tp - T, W), txns.dtype)], axis=0)
+                sg = jnp.concatenate(
+                    [signs, jnp.zeros((tp - T,), signs.dtype)])
+                return lambda: delta_count_pallas(cands, tx, sg, bc=bc, bt=bt)
+        return make
     if impl in ("rules_jnp", "rules_pallas"):
         R = min(C, _CAP_C)             # rules play the candidate role
         Q = min(T, _CAP_T_ROWS)        # baskets play the transaction role
@@ -197,7 +228,8 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     untunable = (
         impl not in CONFIGS
         or impl.endswith("interpret")
-        or (impl in ("pallas", "vertical_pallas", "rules_pallas")
+        or (impl in ("pallas", "vertical_pallas", "rules_pallas",
+                     "delta_pallas")
             and backend != "tpu")
         or os.environ.get("REPRO_AUTOTUNE", "1") == "0"
     )

@@ -1,0 +1,203 @@
+"""Pallas TPU kernel: signed delta support counting for streaming windows.
+
+Streaming updates (DESIGN.md §8) change a transaction window by a micro-batch
+of *added* and *evicted* transactions.  Support counts are sums over
+transactions, so the new count of every tracked candidate is
+
+    count'[i] = count[i] + |{t ∈ added : c_i ⊆ t}| − |{t ∈ evicted : c_i ⊆ t}|
+
+and a window update only has to scan the O(delta) slab instead of the
+O(window) database.  Both slabs are processed in one pass: transactions are
+concatenated into a single ``(T, W)`` slab with a per-row sign vector
+(+1 added, −1 evicted, 0 padding), and the kernel accumulates
+
+    delta[i] = Σ_j sign[j] · [cand[i] ⊆ txn[j]]
+
+Tiling mirrors ``support_count.py``: candidates ``(BC, W)`` × slab ``(BT, W)``
+tiles in VMEM, the word loop statically unrolled, an ``(BC,)`` int32
+accumulator revisited across the slab grid axis.  Sign-0 padding makes the
+kernel self-correcting: zero-padded slab rows match empty (zero-padded)
+candidate rows, but contribute 0 — so unlike ``support_count`` no
+empty-candidate correction term is needed on either path.
+
+The blocked-jnp twin (:func:`delta_count_jnp`) is bit-exact (integer
+arithmetic only) and is the CPU production path; block sizes are autotuned
+via ``kernels/autotune.py`` (§5) under the ``delta_jnp`` / ``delta_pallas``
+impl keys.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.autotune import DEFAULTS, _bucket, tuned_blocks
+
+DEFAULT_BC = 256
+DEFAULT_BT = 256
+DEFAULT_TXN_BLOCK = 1024
+
+DELTA_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+
+MIN_SLAB_BUCKET = 32       # pow2 slab padding floor — few compiled shapes
+
+
+def _delta_count_kernel(c_ref, t_ref, s_ref, o_ref, *, n_words: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ok = None
+    for w in range(n_words):  # static unroll, W is tiny
+        cw = c_ref[:, w][:, None]          # (BC, 1)
+        tw = t_ref[:, w][None, :]          # (1, BT)
+        eq = (cw & tw) == cw               # (BC, BT)
+        ok = eq if ok is None else (ok & eq)
+    signed = jnp.where(ok, s_ref[...][None, :], jnp.int32(0))
+    o_ref[...] += signed.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bt", "interpret"))
+def delta_count_pallas(cands: jax.Array, txns: jax.Array, signs: jax.Array,
+                       bc: int = DEFAULT_BC, bt: int = DEFAULT_BT,
+                       interpret: bool = False) -> jax.Array:
+    """Signed delta counts via the Pallas kernel.
+
+    Args:
+      cands: (C, W) uint32 candidate bitmasks, C % bc == 0 (pre-padded).
+      txns:  (T, W) uint32 slab bitmasks, T % bt == 0 (pre-padded).
+      signs: (T,) int32 per-row sign: +1 added, −1 evicted, 0 padding.
+
+    Returns: (C,) int32 signed count deltas.
+    """
+    C, W = cands.shape
+    T, Wt = txns.shape
+    assert W == Wt, (W, Wt)
+    assert C % bc == 0 and T % bt == 0, (C, bc, T, bt)
+    grid = (C // bc, T // bt)
+    return pl.pallas_call(
+        functools.partial(_delta_count_kernel, n_words=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, W), lambda ci, ti: (ci, 0)),
+            pl.BlockSpec((bt, W), lambda ci, ti: (ti, 0)),
+            pl.BlockSpec((bt,), lambda ci, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.int32),
+        interpret=interpret,
+    )(cands.astype(jnp.uint32), txns.astype(jnp.uint32),
+      signs.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def delta_count_jnp(cands: jax.Array, txns: jax.Array, signs: jax.Array,
+                    block: int = DEFAULT_TXN_BLOCK) -> jax.Array:
+    """Blocked jnp twin of :func:`delta_count_pallas` (bit-exact: int math).
+
+    Scans slab chunks so peak memory is O(C · block) instead of O(C · T).
+    """
+    C, W = cands.shape
+    pad = (-txns.shape[0]) % block
+    if pad:
+        txns = jnp.concatenate(
+            [txns, jnp.zeros((pad, W), txns.dtype)], axis=0)
+        signs = jnp.concatenate([signs, jnp.zeros((pad,), signs.dtype)])
+    chunks = txns.reshape(-1, block, W)
+    sign_chunks = signs.astype(jnp.int32).reshape(-1, block)
+
+    def body(acc, xs):
+        chunk, sgn = xs
+        c = cands[:, None, :]
+        t = chunk[None, :, :]
+        match = jnp.all((c & t) == c, axis=-1)
+        signed = jnp.where(match, sgn[None, :], jnp.int32(0))
+        return acc + signed.sum(axis=1).astype(jnp.int32), None
+
+    init = jnp.zeros((C,), jnp.int32)
+    acc, _ = jax.lax.scan(body, init, (chunks, sign_chunks))
+    return acc
+
+
+def build_slab(added: np.ndarray, evicted: np.ndarray,
+               min_bucket: int = MIN_SLAB_BUCKET):
+    """Concatenate add/evict slabs, pad rows to a pow2 bucket with sign 0.
+
+    Returns ``(slab (Tp, W) uint32, signs (Tp,) int32)`` — pow2-bucketed so
+    the streaming loop touches a handful of compiled slab shapes (§2).
+    """
+    added = np.asarray(added, np.uint32)
+    evicted = np.asarray(evicted, np.uint32)
+    W = added.shape[1] if added.ndim == 2 else evicted.shape[1]
+    slab = np.concatenate([added, evicted], axis=0)
+    signs = np.concatenate([np.ones(added.shape[0], np.int32),
+                            -np.ones(evicted.shape[0], np.int32)])
+    tp = max(min_bucket, _bucket(max(slab.shape[0], 1)))
+    if tp != slab.shape[0]:
+        slab = np.concatenate(
+            [slab, np.zeros((tp - slab.shape[0], W), np.uint32)], axis=0)
+        signs = np.concatenate(
+            [signs, np.zeros(tp - signs.shape[0], np.int32)])
+    return slab, signs
+
+
+def delta_count(cands, added, evicted, impl: str = "auto",
+                autotune: bool = True) -> np.ndarray:
+    """Host wrapper: signed count delta per candidate for one window update.
+
+    Args:
+      cands:   (C, W) uint32 tracked candidate bitmasks (any row count —
+               pre-bucket-padding them via ``phases.bucket_pad`` keeps the
+               compiled-shape set small across a stream).
+      added:   (A, W) uint32 transactions entering the window.
+      evicted: (E, W) uint32 transactions leaving the window.
+      impl:    "auto" | "jnp" | "pallas" | "pallas_interpret" ("auto": pallas
+               on TPU, jnp elsewhere; "pallas" off-TPU degrades to interpret).
+
+    Returns: (C,) int32 — add to the tracked int64 counts.
+    """
+    if impl not in DELTA_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; options: {DELTA_IMPLS}")
+    cands = np.asarray(cands, np.uint32)
+    C, W = cands.shape
+    if C == 0:
+        return np.zeros((0,), np.int32)
+    slab, signs = build_slab(added, evicted)
+    if not signs.any():
+        return np.zeros((C,), np.int32)
+    backend = jax.default_backend()
+    if impl == "auto":
+        impl = "pallas" if backend == "tpu" else "jnp"
+    T = slab.shape[0]
+    if impl == "jnp":
+        blocks = (tuned_blocks("delta_jnp", C=C, T=T, W=W) if autotune
+                  else dict(DEFAULTS["delta_jnp"]))
+        block = min(blocks["txn_block"], T)
+        out = delta_count_jnp(jnp.asarray(cands), jnp.asarray(slab),
+                              jnp.asarray(signs), block=block)
+        return np.asarray(out)
+    interpret = impl == "pallas_interpret" or backend != "tpu"
+    impl_key = "delta_pallas_interpret" if interpret else "delta_pallas"
+    blocks = (tuned_blocks(impl_key, C=C, T=T, W=W) if autotune
+              else dict(DEFAULTS[impl_key]))
+    bc = min(blocks["bc"], _bucket(C))
+    bt = min(blocks["bt"], T)
+    pad_c = (-C) % bc
+    if pad_c:
+        cands = np.concatenate(
+            [cands, np.zeros((pad_c, W), np.uint32)], axis=0)
+    pad_t = (-T) % bt
+    if pad_t:
+        slab = np.concatenate(
+            [slab, np.zeros((pad_t, W), np.uint32)], axis=0)
+        signs = np.concatenate([signs, np.zeros(pad_t, np.int32)])
+    out = delta_count_pallas(jnp.asarray(cands), jnp.asarray(slab),
+                             jnp.asarray(signs), bc=bc, bt=bt,
+                             interpret=interpret)
+    return np.asarray(out)[:C]

@@ -22,6 +22,7 @@ from repro.core.mapreduce import MapReduceRuntime
 from repro.core.policy import ALGORITHMS
 from repro.data import dataset_by_name, load_transactions
 from repro.serving import RULE_IMPLS, RuleServeEngine
+from repro.serving.common import latency_ms
 
 
 def make_queries(txns, n_queries: int, seed: int = 0):
@@ -94,8 +95,7 @@ def main():
     results, records = eng.serve(batches)
     total_s = time.perf_counter() - t0
 
-    lat_ms = np.repeat([r.elapsed * 1e3 for r in records],
-                       [max(r.n_queries, 1) for r in records])
+    lat_ms = latency_ms(records)
     fused = sum(1 for r in records if r.n_batches > 1)
     print(f"served {len(queries)} queries in {len(records)} dispatches "
           f"({fused} fused) with algorithm={args.algorithm} impl={args.impl}")

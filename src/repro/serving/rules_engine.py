@@ -16,6 +16,13 @@ isomorphism: one dispatch answering ``npass`` queued batches is the serving
 analogue of one counting job covering ``npass`` Apriori levels — candidate
 count |C| maps to rule·query pairs scored, |L| to queries answered.  The SPC
 policy reproduces strict per-batch dispatch (the "unfused" benchmark arm).
+
+Live rule refresh (DESIGN.md §8): everything derived from the RuleSet —
+device arrays, float64 metric columns, the per-shape jit cache — is bundled
+into one immutable :class:`_RuleState`, and :meth:`RuleServeEngine.swap_rules`
+replaces the whole bundle with a single reference assignment.  A serve call
+captures the state once, so in-flight queries never observe a half-swapped
+("torn") rule table; the next call sees the fresh rules.
 """
 
 from __future__ import annotations
@@ -27,15 +34,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitset import n_words, pack_itemsets, unpack_itemsets
+from repro.core.bitset import n_words, unpack_itemsets
 from repro.core.policy import ALGORITHMS, PhaseStats
 from repro.core.rules import RuleSet
-from repro.kernels.autotune import DEFAULTS, _bucket, tuned_blocks
+from repro.kernels.autotune import DEFAULTS, tuned_blocks
 from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
 
-RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+from .common import MIN_QUERY_BUCKET, bucket_rows, pack_baskets
 
-MIN_QUERY_BUCKET = 8
+RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,10 +61,31 @@ class RuleServeRecord:
     elapsed: float
 
 
-def _bucket_rows(n: int, floor: int = MIN_QUERY_BUCKET) -> int:
-    """Power-of-two row bucket ≥ n — a handful of compiled query shapes.
-    Same rounding as the autotuner's shape buckets, floored for tiny batches."""
-    return max(floor, _bucket(n))
+class _RuleState:
+    """Everything derived from one RuleSet, built eagerly so a reference swap
+    publishes a complete, internally consistent table."""
+
+    def __init__(self, rules: RuleSet):
+        self.rules = rules
+        self.W = n_words(rules.n_items)
+        self.d_ante = jnp.asarray(rules.ante_masks)
+        self.d_cons = jnp.asarray(rules.cons_masks)
+        self.d_scores = jnp.asarray(rules.score, jnp.float32)
+        # host decode: exact float64 metrics (vectorized) + a lazy per-index
+        # consequent-tuple cache — only rules top_k actually surfaces pay the
+        # host bit-walk, never all R of them
+        self.cons_cache: dict[int, tuple] = {}
+        _, self.conf64, self.lift64, _ = rules.exact_metrics()
+        self.jitted: dict = {}
+
+    def __len__(self) -> int:
+        return self.rules.ante_masks.shape[0]
+
+    def cons_tuple(self, r: int) -> tuple:
+        if r not in self.cons_cache:
+            self.cons_cache[r] = unpack_itemsets(
+                self.rules.cons_masks[r:r + 1])[0]
+        return self.cons_cache[r]
 
 
 class RuleServeEngine:
@@ -101,7 +129,6 @@ class RuleServeEngine:
         self._interpret = (impl == "pallas_interpret"
                            or (impl == "pallas" and backend != "tpu"))
         self.impl = "pallas" if impl.startswith("pallas") else "jnp"
-        self.rules = rules
         self.top_k = top_k
         self.max_fuse = max_fuse
         self.exclude_contained = exclude_contained
@@ -112,42 +139,53 @@ class RuleServeEngine:
         self.algorithm = algorithm
         self.policy = policy_cls(**(policy_kwargs or {}))
 
-        self._W = n_words(rules.n_items)
-        self._d_ante = jnp.asarray(rules.ante_masks)
-        self._d_cons = jnp.asarray(rules.cons_masks)
-        self._d_scores = jnp.asarray(rules.score, jnp.float32)
-        # host decode: exact float64 metrics (vectorized) + a lazy per-index
-        # consequent-tuple cache — only rules top_k actually surfaces pay the
-        # host bit-walk, never all R of them
-        self._cons_cache: dict[int, tuple] = {}
-        _, self._conf64, self._lift64, _ = rules.exact_metrics()
-
+        self._state = _RuleState(rules)
         self.records: list[RuleServeRecord] = []
-        self._jitted: dict = {}
+
+    @property
+    def rules(self) -> RuleSet:
+        return self._state.rules
 
     @property
     def n_rules(self) -> int:
-        return len(self.rules)
+        return len(self._state)
 
     @property
     def dispatches(self) -> int:
         return len(self.records)
 
+    # -- live refresh ----------------------------------------------------------
+
+    def swap_rules(self, rules: RuleSet, warm_to: int | None = None) -> None:
+        """Atomically replace the served RuleSet (DESIGN.md §8).
+
+        The complete successor state (device arrays, metric columns, empty jit
+        cache) is built first — optionally pre-compiled up to ``warm_to``
+        queries so the first post-swap dispatch pays no compile cost — and
+        then published with one reference assignment.  Serve calls capture the
+        state once, so a query stream never sees a torn table: each dispatch
+        is answered entirely by the old rules or entirely by the new ones.
+        """
+        state = _RuleState(rules)
+        if warm_to:
+            self._warm(state, warm_to, self.top_k)
+        self._state = state
+
     # -- jitted dispatch -------------------------------------------------------
 
-    def _blocks(self, impl_key: str, Qp: int) -> dict:
+    def _blocks(self, state: _RuleState, impl_key: str, Qp: int) -> dict:
         if not self.autotune:
             return dict(DEFAULTS[impl_key])
-        return tuned_blocks(impl_key, C=max(self.n_rules, 1), T=Qp, W=self._W)
+        return tuned_blocks(impl_key, C=max(len(state), 1), T=Qp, W=state.W)
 
-    def _fn(self, Qp: int, k: int):
+    def _fn(self, state: _RuleState, Qp: int, k: int):
         key = (Qp, k)
-        if key in self._jitted:
-            return self._jitted[key]
-        ante, cons, scores = self._d_ante, self._d_cons, self._d_scores
+        if key in state.jitted:
+            return state.jitted[key]
+        ante, cons, scores = state.d_ante, state.d_cons, state.d_scores
         excl = self.exclude_contained
         if self.impl == "jnp":
-            blocks = self._blocks("rules_jnp", Qp)
+            blocks = self._blocks(state, "rules_jnp", Qp)
             qb = min(blocks["q_block"], Qp)
 
             def fn(baskets):
@@ -157,7 +195,7 @@ class RuleServeEngine:
         else:
             impl_key = ("rules_pallas_interpret" if self._interpret
                         else "rules_pallas")
-            blocks = self._blocks(impl_key, Qp)
+            blocks = self._blocks(state, impl_key, Qp)
             interpret = self._interpret
 
             def fn(baskets):
@@ -166,48 +204,41 @@ class RuleServeEngine:
                                        exclude_contained=excl,
                                        interpret=interpret)
                 return jax.lax.top_k(s, k)
-        self._jitted[key] = jax.jit(fn)
-        return self._jitted[key]
+        state.jitted[key] = jax.jit(fn)
+        return state.jitted[key]
 
-    def _dispatch(self, packed: np.ndarray, k: int):
+    def _dispatch(self, state: _RuleState, packed: np.ndarray, k: int):
         """(Q, W) packed baskets → host (Q, k) score values + rule indices."""
         Q = packed.shape[0]
-        Qp = _bucket_rows(Q)
+        Qp = bucket_rows(Q)
         if Qp != Q:
             packed = np.concatenate(
-                [packed, np.zeros((Qp - Q, self._W), np.uint32)], axis=0)
-        vals, idx = self._fn(Qp, k)(jnp.asarray(packed))
+                [packed, np.zeros((Qp - Q, state.W), np.uint32)], axis=0)
+        vals, idx = self._fn(state, Qp, k)(jnp.asarray(packed))
         return np.asarray(vals)[:Q], np.asarray(idx)[:Q]
 
-    def warmup(self, max_queries: int, top_k: int | None = None):
-        """Pre-compile every pow2 query bucket up to ``max_queries`` (and run
-        the autotuner) so no dispatch in the serving loop pays compile cost."""
-        k = max(min(self.top_k if top_k is None else top_k, self.n_rules), 0)
+    def _warm(self, state: _RuleState, max_queries: int,
+              top_k: int | None = None):
+        k = max(min(self.top_k if top_k is None else top_k, len(state)), 0)
         if k == 0:
             return
-        kf = min(k * self.overfetch, self.n_rules) if self.dedup_consequents else k
+        kf = min(k * self.overfetch, len(state)) if self.dedup_consequents else k
         b = MIN_QUERY_BUCKET
         while True:
-            self._dispatch(np.zeros((b, self._W), np.uint32), kf)
+            self._dispatch(state, np.zeros((b, state.W), np.uint32), kf)
             if b >= max_queries:
                 break
             b *= 2
 
+    def warmup(self, max_queries: int, top_k: int | None = None):
+        """Pre-compile every pow2 query bucket up to ``max_queries`` (and run
+        the autotuner) so no dispatch in the serving loop pays compile cost."""
+        self._warm(self._state, max_queries, top_k)
+
     # -- host driver -----------------------------------------------------------
 
-    def _pack(self, baskets) -> np.ndarray:
-        """Item-id baskets → (Q, W) uint32 bitsets; unknown ids are ignored."""
-        n = self.rules.n_items
-        clean = [[i for i in b if 0 <= i < n] for b in baskets]
-        return pack_itemsets(clean, n)
-
-    def _cons_tuple(self, r: int) -> tuple:
-        if r not in self._cons_cache:
-            self._cons_cache[r] = unpack_itemsets(
-                self.rules.cons_masks[r:r + 1])[0]
-        return self._cons_cache[r]
-
-    def _decode(self, vals: np.ndarray, idx: np.ndarray, k: int):
+    def _decode(self, state: _RuleState, vals: np.ndarray, idx: np.ndarray,
+                k: int):
         dedup = self.dedup_consequents
         out = []
         for q in range(vals.shape[0]):
@@ -219,13 +250,13 @@ class RuleServeEngine:
                 if np.isneginf(vals[q, j]) or len(recs) >= k:
                     break
                 r = int(idx[q, j])
-                cons = self._cons_tuple(r)
+                cons = state.cons_tuple(r)
                 if dedup:
                     if cons in seen:
                         continue    # a lower-scored rule for the same consequent
                     seen.add(cons)
                 recs.append(Recommendation(
-                    cons, float(self._conf64[r]), float(self._lift64[r]),
+                    cons, float(state.conf64[r]), float(state.lift64[r]),
                     float(vals[q, j])))
             out.append(recs)
         return out
@@ -243,12 +274,14 @@ class RuleServeEngine:
         ``records`` the per-dispatch :class:`RuleServeRecord` trace (also kept
         on ``self.records``).
         """
-        k = max(min(self.top_k if top_k is None else top_k, self.n_rules), 0)
+        state = self._state          # snapshot: one consistent table per call
+        n_rules = len(state)
+        k = max(min(self.top_k if top_k is None else top_k, n_rules), 0)
         batches = list(batches)
         results: list = []
         records: list[RuleServeRecord] = []
         history: list[PhaseStats] = []
-        if self.n_rules == 0 or k == 0:       # no rules: everything is empty
+        if n_rules == 0 or k == 0:            # no rules: everything is empty
             results = [[[] for _ in b] for b in batches]
             self.records = records
             return results, records
@@ -270,10 +303,11 @@ class RuleServeEngine:
 
             t0 = time.perf_counter()
             if flat:
-                kf = (min(k * self.overfetch, self.n_rules)
+                kf = (min(k * self.overfetch, n_rules)
                       if self.dedup_consequents else k)
-                vals, idx = self._dispatch(self._pack(flat), kf)
-                decoded = self._decode(vals, idx, k)
+                vals, idx = self._dispatch(
+                    state, pack_baskets(flat, state.rules.n_items), kf)
+                decoded = self._decode(state, vals, idx, k)
             else:
                 decoded = []
             elapsed = time.perf_counter() - t0
@@ -283,7 +317,7 @@ class RuleServeEngine:
                 results.append(decoded[off:off + sz])
                 off += sz
             n_q = len(flat)
-            history.append(PhaseStats(self.n_rules * max(n_q, 1),
+            history.append(PhaseStats(n_rules * max(n_q, 1),
                                       max(n_q, 1), elapsed))
             records.append(RuleServeRecord(phase_idx, nfuse, n_q, elapsed))
             i += nfuse

@@ -44,6 +44,35 @@ def test_loader_roundtrip(tmp_path):
     assert n2 <= n_items
 
 
+def test_loader_roundtrip_blank_lines_and_whitespace(tmp_path):
+    """FIMI files in the wild have blank lines and trailing whitespace; the
+    loader must skip the former and tolerate the latter."""
+    p = str(tmp_path / "messy.txt")
+    with open(p, "w") as f:
+        f.write("1 2 3   \n\n  \n7 5\n\t\n0\n   4 9\t\n\n")
+    loaded, n_items = load_transactions(p)
+    assert loaded == [[1, 2, 3], [7, 5], [0], [4, 9]]
+    assert n_items == 10                         # max item 9 → catalog size 10
+
+
+def test_loader_roundtrip_empty_file(tmp_path):
+    p = str(tmp_path / "empty.txt")
+    save_transactions(p, [])
+    loaded, n_items = load_transactions(p)
+    assert loaded == [] and n_items == 0
+
+
+def test_dataset_stats_empty():
+    """Empty transaction lists are routine on the stream path — zero stats,
+    no ValueError from widths.max() and no NaN warning from widths.mean()."""
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        stats = dataset_stats([], 100)
+    assert stats == {"n_txns": 0, "n_items": 100, "avg_width": 0.0,
+                     "max_width": 0, "density": 0.0}
+
+
 def test_balance_shards_by_width():
     rng = np.random.default_rng(0)
     txns = [list(range(rng.integers(1, 40))) for _ in range(200)]

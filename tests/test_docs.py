@@ -73,14 +73,15 @@ def test_readme_exists_and_commands_resolve():
 def test_readme_mentions_tracked_benchmarks():
     text = (ROOT / "README.md").read_text()
     for record in ("BENCH_exec_time.json", "BENCH_kernels.json",
-                   "BENCH_rules.json"):
+                   "BENCH_rules.json", "BENCH_stream.json"):
         assert record in text, f"README should cite {record} headline numbers"
         assert (ROOT / record).exists(), f"{record} missing from repo root"
 
 
 @pytest.mark.parametrize("surface", [
-    "repro.launch.mine", "repro.launch.serve_rules",
+    "repro.launch.mine", "repro.launch.serve_rules", "repro.launch.stream",
     "examples/quickstart.py", "examples/recommend.py",
+    "examples/stream_mine.py",
 ])
 def test_quickstart_surfaces_in_readme(surface):
     """The documented entry points stay documented."""

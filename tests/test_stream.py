@@ -1,0 +1,299 @@
+"""Streaming subsystem: window ring-buffer semantics, delta-count kernel
+bit-exactness, incremental-vs-scratch equivalence (the tentpole property),
+re-mine triggers and atomic rule swapping."""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import generate_ruleset, mine
+from repro.core.bitset import pack_itemsets
+from repro.core.mapreduce import MapReduceRuntime
+from repro.kernels import delta_count, support_count
+from repro.kernels.delta_count import (build_slab, delta_count_jnp,
+                                       delta_count_pallas)
+from repro.stream import StreamMiner, TransactionWindow
+from repro.stream.tables import levels_equal
+
+N_ITEMS = 12
+MIN_SUP = 0.3
+
+
+def toy_txns(n, seed=0, n_items=N_ITEMS, drop=None):
+    """Patterned random baskets (same shape as the rules-engine fixture)."""
+    rng = np.random.default_rng(seed)
+    base = rng.random((3, n_items)) < 0.5
+    out = []
+    for _ in range(n):
+        pat = base[rng.integers(3)]
+        row = np.where(rng.random(n_items) < 0.85, pat,
+                       rng.random(n_items) < 0.1)
+        t = np.nonzero(row)[0].tolist() or [0]
+        if drop is not None:
+            t = [i for i in t if i not in drop] or [0]
+        out.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TransactionWindow
+# ---------------------------------------------------------------------------
+
+def test_window_pow2_capacity_and_fifo():
+    w = TransactionWindow(N_ITEMS, capacity=100)      # buckets up to 128
+    assert w.capacity == 128
+    txns = toy_txns(140, seed=1)
+    d1 = w.append(txns[:100])
+    assert d1.n_added == 100 and d1.n_evicted == 0 and w.size == 100
+    d2 = w.append(txns[100:140])                      # overflows by 12
+    assert d2.n_added == 40 and d2.n_evicted == 12 and w.size == 128
+    # FIFO: the evicted rows are exactly the 12 oldest appended
+    np.testing.assert_array_equal(d2.evicted,
+                                  pack_itemsets(txns[:12], N_ITEMS))
+    np.testing.assert_array_equal(w.contents(),
+                                  pack_itemsets(txns[12:140], N_ITEMS))
+
+
+def test_window_oversized_batch_keeps_newest():
+    w = TransactionWindow(N_ITEMS, capacity=64)
+    w.append(toy_txns(10, seed=2))
+    big = toy_txns(80, seed=3)
+    d = w.append(big)
+    assert w.size == 64 and d.n_added == 64
+    assert d.n_evicted == 10                          # all previous rows left
+    np.testing.assert_array_equal(w.contents(),
+                                  pack_itemsets(big[-64:], N_ITEMS))
+
+
+def test_window_landmark_grows():
+    w = TransactionWindow(N_ITEMS, capacity=64, mode="landmark")
+    txns = toy_txns(200, seed=4)
+    for i in range(0, 200, 50):
+        d = w.append(txns[i:i + 50])
+        assert d.n_evicted == 0
+    assert w.size == 200 and w.capacity == 256        # doubled as needed
+    np.testing.assert_array_equal(w.contents(), pack_itemsets(txns, N_ITEMS))
+
+
+def test_window_evict_and_device_mirror():
+    w = TransactionWindow(N_ITEMS, capacity=64)
+    txns = toy_txns(90, seed=5)
+    w.append(txns[:60])
+    d = w.evict(20)
+    np.testing.assert_array_equal(d.evicted, pack_itemsets(txns[:20], N_ITEMS))
+    w.append(txns[60:90])                             # wraps the ring
+    assert w.size == 64                               # 40 + 30 − 6 evicted
+    # the device ring holds exactly the live rows (vacant slots zero)
+    host = np.zeros((w.capacity, w.W), np.uint32)
+    slots = (w._start + np.arange(w.size)) % w.capacity
+    host[slots] = w.contents()
+    np.testing.assert_array_equal(np.asarray(w.device_masks()), host)
+    # evicting everything empties cleanly
+    w.evict(w.size)
+    assert w.size == 0 and w.contents().shape == (0, w.W)
+    assert not np.asarray(w.device_masks()).any()
+
+
+# ---------------------------------------------------------------------------
+# Delta counting kernel
+# ---------------------------------------------------------------------------
+
+def test_delta_count_matches_signed_support():
+    rng = np.random.default_rng(0)
+    cands = rng.integers(0, 2**16, (37, 2), dtype=np.uint32)
+    cands[5] = 0                                      # empty candidate row
+    added = rng.integers(0, 2**16, (23, 2), dtype=np.uint32)
+    evicted = rng.integers(0, 2**16, (11, 2), dtype=np.uint32)
+    want = (np.asarray(support_count(cands, added, impl="jnp"))
+            - np.asarray(support_count(cands, evicted, impl="jnp")))
+    got = delta_count(cands, added, evicted, impl="jnp")
+    np.testing.assert_array_equal(got, want)
+    # empty slabs → all-zero delta, either side
+    zero = np.zeros((0, 2), np.uint32)
+    assert not delta_count(cands, zero, zero, impl="jnp").any()
+    np.testing.assert_array_equal(
+        delta_count(cands, added, zero, impl="jnp"),
+        np.asarray(support_count(cands, added, impl="jnp")))
+
+
+def test_delta_count_pallas_interpret_bit_exact():
+    rng = np.random.default_rng(1)
+    cands = rng.integers(0, 2**32, (64, 3), dtype=np.uint32)
+    slab, signs = build_slab(rng.integers(0, 2**32, (17, 3), dtype=np.uint32),
+                             rng.integers(0, 2**32, (9, 3), dtype=np.uint32))
+    ref = np.asarray(delta_count_jnp(cands, slab, signs, block=8))
+    pal = np.asarray(delta_count_pallas(cands, slab, signs, bc=16, bt=8,
+                                        interpret=True))
+    np.testing.assert_array_equal(ref, pal)
+    got = delta_count(cands, slab[:17], slab[17:26], impl="pallas_interpret")
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Incremental ≡ from-scratch (the tentpole property)
+# ---------------------------------------------------------------------------
+
+def assert_state_exact(miner):
+    """Frequent itemsets, supports AND the published RuleSet must equal a
+    from-scratch mine of the current window, bit-exactly."""
+    if miner.window.size == 0:
+        assert miner.levels == {} and miner.engine.n_rules == 0
+        return
+    scratch = mine(db_masks=miner.window.contents(), n_items=miner.n_items,
+                   min_sup=miner.min_sup, algorithm=miner.algorithm,
+                   runtime=miner.runtime)
+    assert levels_equal(miner.levels, scratch.levels)
+    want = generate_ruleset(scratch, miner.min_confidence)
+    got = miner.engine.rules
+    for field in ("ante_masks", "cons_masks", "union_counts", "ante_counts",
+                  "cons_counts"):
+        np.testing.assert_array_equal(getattr(got, field),
+                                      getattr(want, field), err_msg=field)
+
+
+def run_sequence(ops, mode="sliding", capacity=64, seed=0):
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=capacity, mode=mode,
+                        min_confidence=0.6)
+    paths = []
+    for kind, payload in ops:
+        rec = miner.push(payload) if kind == "append" else miner.evict(payload)
+        paths.append(rec.path)
+        assert_state_exact(miner)
+    return miner, paths
+
+
+def random_ops(seed, n_ops=8, max_batch=12):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        if rng.random() < 0.7:
+            ops.append(("append",
+                        toy_txns(int(rng.integers(1, max_batch)),
+                                 seed=int(rng.integers(1 << 20)))))
+        else:
+            ops.append(("evict", int(rng.integers(1, 16))))
+    return ops
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("mode", ["sliding", "landmark"])
+def test_incremental_equals_scratch_random_sequences(seed, mode):
+    miner, paths = run_sequence(random_ops(seed), mode=mode)
+    assert len(miner.updates) == len(paths)
+
+
+def test_delta_path_actually_taken_and_exact():
+    """A stationary stream must settle onto the O(delta) path (not re-mine
+    every step) while staying exact — guards against a trivially-correct
+    implementation that always re-mines."""
+    txns = toy_txns(200, seed=7)
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64)
+    miner.push(txns[:64])
+    paths = [miner.push(txns[64 + 4 * i:64 + 4 * (i + 1)]).path
+             for i in range(8)]
+    assert "delta" in paths
+    assert_state_exact(miner)
+
+
+def test_structural_drift_forces_remine():
+    """Shifting the distribution hard enough must fall back to a full
+    re-mine (untracked candidates), and stay exact through it."""
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64)
+    miner.push(toy_txns(64, seed=8))
+    n0 = miner.n_remines
+    # flood with wide baskets: many new itemsets go frequent at once
+    wide = [[i for i in range(N_ITEMS) if i % 2 == 0] for _ in range(48)]
+    miner.push(wide)
+    miner.push(wide)
+    assert miner.n_remines > n0
+    assert_state_exact(miner)
+
+
+def test_staleness_trigger_remines():
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64,
+                        staleness_factor=1e-9)      # hair trigger
+    miner.push(toy_txns(64, seed=9))
+    rec = miner.push(toy_txns(4, seed=10))
+    assert rec.path in ("remine_staleness", "remine_structural")
+    assert_state_exact(miner)
+
+
+def test_empty_window_round_trip():
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64)
+    txns = toy_txns(32, seed=11)
+    miner.push(txns)
+    rec = miner.evict(32)
+    assert rec.path == "empty" and miner.levels == {}
+    assert miner.query([[0, 1]]) == [[]]
+    rec = miner.push(txns[:16])                     # refills → fresh re-mine
+    assert rec.path == "remine"
+    assert_state_exact(miner)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=8, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("append"),
+                  st.lists(st.lists(st.integers(0, N_ITEMS - 1),
+                                    min_size=1, max_size=6),
+                           min_size=1, max_size=10)),
+        st.tuples(st.just("evict"), st.integers(1, 12))),
+    min_size=1, max_size=6))
+def test_property_incremental_equals_scratch(ops):
+    """For ANY sequence of append/evict micro-batches, incremental state ==
+    from-scratch mine of the window contents, at every step."""
+    run_sequence(ops, capacity=64)
+
+
+# ---------------------------------------------------------------------------
+# Live rule refresh / atomic swap
+# ---------------------------------------------------------------------------
+
+def test_swap_rules_is_atomic_and_live():
+    txns = toy_txns(120, seed=12)
+    res = mine(txns[:120], n_items=N_ITEMS, min_sup=MIN_SUP)
+    rules_a = generate_ruleset(res, min_confidence=0.6)
+    res_b = mine(txns[:60], n_items=N_ITEMS, min_sup=0.5)
+    rules_b = generate_ruleset(res_b, min_confidence=0.6)
+    assert len(rules_a) != len(rules_b)
+
+    from repro.serving import RuleServeEngine
+    eng = RuleServeEngine(rules_a, impl="jnp")
+    baskets = [sorted(set(t[:-1])) or [0] for t in txns[:10]]
+    before = eng.query(baskets)
+    eng.swap_rules(rules_b, warm_to=16)
+    assert eng.n_rules == len(rules_b)
+    after = eng.query(baskets)
+    # post-swap answers match a fresh engine on the new rules (complete
+    # table, no torn state), and the old results object is untouched
+    fresh = RuleServeEngine(rules_b, impl="jnp").query(baskets)
+    assert after == fresh
+    assert before == RuleServeEngine(rules_a, impl="jnp").query(baskets)
+
+
+def test_stream_refresh_serves_current_rules():
+    txns = toy_txns(160, seed=13)
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64, min_confidence=0.6)
+    miner.push(txns[:64])
+    baskets = [sorted(set(t[:-1])) or [0] for t in txns[:5]]
+    for i in range(3):
+        miner.push(txns[64 + 8 * i:64 + 8 * (i + 1)])
+        want = generate_ruleset(
+            mine(db_masks=miner.window.contents(), n_items=N_ITEMS,
+                 min_sup=MIN_SUP), miner.min_confidence)
+        from repro.serving import RuleServeEngine
+        fresh = RuleServeEngine(want, impl="jnp").query(baskets)
+        assert miner.query(baskets) == fresh
+
+
+def test_update_records_are_coherent():
+    miner = StreamMiner(N_ITEMS, MIN_SUP, capacity=64)
+    miner.push(toy_txns(64, seed=14))
+    miner.push(toy_txns(4, seed=15))
+    recs = miner.updates
+    assert [r.seq for r in recs] == list(range(len(recs)))
+    assert recs[0].path == "remine" and recs[0].remine_seconds > 0
+    assert all(r.window_size <= 64 for r in recs)
+    assert all(r.n_rules == 0 or r.n_frequent > 0 for r in recs)
