@@ -1,0 +1,131 @@
+"""Cost-model benchmark (DESIGN.md §9): predictor accuracy + the measured
+policy vs the paper's hand-tuned drivers.
+
+Writes ``BENCH_costmodel.json`` with two arms, tracked across PRs by CI:
+
+* ``predictor``  — calibrate the count-job fit on one mining run, then replay
+  a *held-out* run (same dataset, different min_sup ⇒ different candidate
+  trajectory) predicting every job's time before observing it;
+  ``roofline.predicted_vs_achieved`` rows + mean |rel err|.
+* ``e2e``        — steady-state mining wall time of ``measured`` (calibrated
+  during the warm-up run) against the paper's best hand-tuned arms
+  (``optimized_vfpc`` / ``optimized_etdpc``) on the paper datasets; the
+  headline is ``measured_within`` = measured ÷ best paper arm.
+"""
+
+import jax
+
+from repro.core.mapreduce import MapReduceRuntime
+from repro.costmodel import CostController, CostModel
+from repro.roofline import predicted_vs_achieved
+
+from .common import DATASETS, emit, load, timed_mine, write_json
+
+PAPER_ARMS = ["optimized_vfpc", "optimized_etdpc"]
+
+
+class _EvalController(CostController):
+    """Predict each counting job's time *before* observing it — the held-out
+    prediction-error probe (observation order makes the eval honest)."""
+
+    def __init__(self, model):
+        super().__init__(model)
+        self.rows = []
+
+    def observe_count(self, n_candidates, seconds):
+        p = self.predict_count(n_candidates)
+        if p is not None and seconds > 0:
+            self.rows.append(dict(n_candidates=int(n_candidates),
+                                  **predicted_vs_achieved(p, seconds)))
+        super().observe_count(n_candidates, seconds)
+
+
+def _predictor_arm(fast: bool):
+    name = "mushroom"
+    txns, n_items = load(name)
+    min_sup = DATASETS[name]["min_sup"]
+    # held-out pass: lower min_sup ⇒ candidate counts the fit never saw
+    held_out_sup = min_sup * 0.8
+    runtime = MapReduceRuntime()
+    # warm both configurations: the model predicts steady-state job cost, so
+    # neither the calibration nor the eval pass may pay one-off compiles
+    warm = CostController(CostModel(persist=False))
+    timed_mine(txns, n_items, min_sup, "optimized_etdpc",
+               runtime=runtime, controller=warm)
+    timed_mine(txns, n_items, held_out_sup, "optimized_etdpc",
+               runtime=runtime, controller=warm)
+    ctl = _EvalController(CostModel(persist=False))
+    timed_mine(txns, n_items, min_sup, "optimized_etdpc",
+               runtime=runtime, controller=ctl)
+    calibration_rows = ctl.model.n_samples(ctl.count_key)
+    ctl.rows = []
+    timed_mine(txns, n_items, held_out_sup, "optimized_etdpc",
+               runtime=runtime, controller=ctl)
+    errs = [r["abs_rel_err"] for r in ctl.rows]
+    return {
+        "dataset": name, "held_out_min_sup": round(held_out_sup, 4),
+        "calibration_jobs": calibration_rows,
+        "held_out_jobs": len(errs),
+        "mean_abs_rel_err": round(sum(errs) / len(errs), 4) if errs else None,
+        "rows": [{k: (round(v, 6) if isinstance(v, float) else v)
+                  for k, v in r.items()} for r in ctl.rows],
+    }
+
+
+def _e2e_arm(fast: bool):
+    names = ["mushroom"] if fast else list(DATASETS)
+    reps = 3 if fast else 5
+    out = {}
+    rows = []
+    for name in names:
+        txns, n_items = load(name)
+        min_sup = DATASETS[name]["min_sup"]
+        runtime = MapReduceRuntime()
+        times = {}
+        for algo in PAPER_ARMS:
+            _, t = timed_mine(txns, n_items, min_sup, algo, warm=True,
+                              reps=reps, runtime=runtime)
+            times[algo] = t
+        # measured: width ceiling 8 matches the range VFPC's 2,5,8 schedule
+        # actually explores.  Calibrate on a throwaway run first — the
+        # calibrated model picks different widths (different fused shapes)
+        # than the uncalibrated fallback, so the warm run inside timed_mine
+        # must already be decision-stable to compile what the reps execute.
+        ctl = CostController(CostModel(persist=False), max_width=8)
+        timed_mine(txns, n_items, min_sup, "measured", runtime=runtime,
+                   controller=ctl)
+        _, t = timed_mine(txns, n_items, min_sup, "measured", warm=True,
+                          reps=reps, runtime=runtime, controller=ctl)
+        times["measured"] = t
+        best_paper = min(times[a] for a in PAPER_ARMS)
+        out[name] = {
+            "seconds": {a: round(v, 4) for a, v in times.items()},
+            "best_paper_arm": min(PAPER_ARMS, key=times.get),
+            "measured_within": round(times["measured"] / best_paper, 3),
+            "decisions": len(ctl.decisions),
+        }
+        for a, v in times.items():
+            rows.append((f"{name}/{a}", f"{v * 1e6:.0f}",
+                         f"x{v / best_paper:.2f}"))
+    emit(rows, ["name", "us_per_call", "derived"])
+    return out
+
+
+def run(fast: bool = False):
+    record = {"backend": jax.default_backend()}
+    record["predictor"] = _predictor_arm(fast)
+    emit([("costmodel/predictor_err",
+           f"{record['predictor']['mean_abs_rel_err']}",
+           f"jobs={record['predictor']['held_out_jobs']}")],
+         ["name", "us_per_call", "derived"])
+    record["e2e"] = _e2e_arm(fast)
+    worst = max(v["measured_within"] for v in record["e2e"].values())
+    record["headline"] = {
+        "mean_abs_rel_err": record["predictor"]["mean_abs_rel_err"],
+        "worst_measured_within": worst,
+    }
+    write_json("BENCH_costmodel.json", record)
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -8,9 +8,10 @@ import argparse
 import sys
 import time
 
-from . import (bench_candidates, bench_decode_fusion, bench_exec_time,
-               bench_kernels, bench_lk_counts, bench_phase_breakdown,
-               bench_rules, bench_scalability, bench_speedup, bench_stream)
+from . import (bench_candidates, bench_costmodel, bench_decode_fusion,
+               bench_exec_time, bench_kernels, bench_lk_counts,
+               bench_phase_breakdown, bench_rules, bench_scalability,
+               bench_speedup, bench_stream)
 
 SUITES = {
     "exec_time": bench_exec_time,          # Figs. 2-4
@@ -23,11 +24,12 @@ SUITES = {
     "kernels": bench_kernels,              # Pallas/counting microbench
     "rules": bench_rules,                  # rule generation + serving (§7)
     "stream": bench_stream,                # streaming incremental mining (§8)
+    "costmodel": bench_costmodel,          # calibrated cost model (§9)
 }
 
 
-# the CI pass: pipeline A/B + kernels + rule subsystem + streaming
-SMOKE_SUITES = ("exec_time", "kernels", "rules", "stream")
+# the CI pass: pipeline A/B + kernels + rule subsystem + streaming + costmodel
+SMOKE_SUITES = ("exec_time", "kernels", "rules", "stream", "costmodel")
 
 
 def main() -> None:

@@ -26,7 +26,7 @@ import numpy as np
 from .bitset import pack_itemsets, singleton_masks, unpack_itemsets
 from .mapreduce import MapReduceRuntime
 from .phases import PhaseResult, bucket_pad, run_phase
-from .policy import ALGORITHMS, PhaseStats
+from .policy import ALGORITHMS, MeasuredPolicy, PhaseStats
 
 # speculate on the next phase's join only when the current level kept at least
 # this fraction of its candidates — the wasted-work factor of joining the
@@ -47,6 +47,8 @@ class MiningResult:
     compiles: int
     straggler_events: int = 0
     overlap_seconds: float = 0.0    # host gen time overlapped with counting jobs
+    decisions: list = dataclasses.field(default_factory=list)
+    # cost-controller telemetry rows for this run (DESIGN.md §9)
 
     def itemsets(self) -> dict:
         """Friendly view: k -> {sorted item tuple: count}."""
@@ -104,6 +106,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
          spec_factor: float = 4.0, max_k: int = 64,
          balance_shards_by_width: bool = False,
          pipeline: bool = True,
+         controller=None,
          count_hook=None) -> MiningResult:
     """Mine frequent itemsets with the selected pass-combining algorithm.
 
@@ -121,6 +124,11 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         re-execution analogue; idempotent by determinism).
       pipeline: fused + async counting jobs with speculative gen/count overlap
         (DESIGN.md §4); False runs the legacy synchronous unfused loop.
+      controller: a :class:`repro.costmodel.CostController`.  Every run
+        calibrates it from observed job timings (feeding the shared cost
+        model); the ``measured`` policy also *decides* from it, and its
+        predictions gate speculative-join overlap.  Default: a controller on
+        the process-wide shared model (DESIGN.md §9).
       count_hook: test hook called around each counting job (for fault and
         straggler injection).
 
@@ -131,6 +139,14 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
     policy_cls, optimized = ALGORITHMS[algorithm]
     policy = policy_cls(**(policy_kwargs or {}))
     runtime = runtime or MapReduceRuntime()
+    if controller is None:
+        if isinstance(policy, MeasuredPolicy):
+            controller = policy.controller
+        else:
+            from repro.costmodel import CostController
+            controller = CostController()
+    elif isinstance(policy, MeasuredPolicy):
+        policy.controller = controller    # one controller decides AND observes
 
     if db_masks is None:
         txn_list = [list(t) for t in transactions]
@@ -147,6 +163,11 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
     t_start = time.perf_counter()
     overlap_start = runtime.stats.overlap_seconds
     db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
+    # calibration context: within this run, job cost varies only with the
+    # candidate count — T and W are pinned here (DESIGN.md §9)
+    controller.set_count_context(n_txns=n_txns, n_words=db_masks.shape[1],
+                                 impl=runtime.impl)
+    decisions_mark = len(controller.decisions)
 
     levels: dict = {}
     phases: list[PhaseResult] = []
@@ -194,6 +215,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         phases.append(PhaseResult(1, 1, [n_items], 0.0, el, el,
                                   [int(keep.sum())], {1: levels[1]}, True))
         history.append((n_items, int(keep.sum()), el))
+        controller.observe_count(n_items, el)
         k_prev = 1
         if checkpoint_dir:
             _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
@@ -215,6 +237,12 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
             kwargs["budget"] = float(val) * prev_frequent.shape[0]
 
         do_spec = pipeline and last_survival >= SPEC_SURVIVAL_THRESHOLD
+        if do_spec:
+            # size the overlap from predictions: a count job predicted shorter
+            # than the join it would hide is not worth speculating over
+            est_cands = prev_frequent.shape[0] * (
+                kwargs["npass"] if "npass" in kwargs else max(val, 1.0))
+            do_spec = controller.should_speculate(int(est_cands))
         if count_hook is not None:
             count_hook("phase_start", k_prev)
         gen_method = "prefix" if pipeline else "pairwise"
@@ -240,6 +268,13 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
 
         if res.npass == 0:     # no candidates could be generated → done
             break
+        # calibrate on the phase's full cost (minus the speculative join that
+        # belongs to the next phase) — the intercept must capture generation
+        # and host-sync overhead too, or fusion looks worthless to the model
+        controller.observe_count(
+            sum(res.candidate_counts),
+            max(res.elapsed_seconds - res.spec_seconds, 0.0))
+        controller.observe_spec(res.spec_seconds)
         phases.append(res)
         levels.update(res.levels)
         # policies see the phase's own cost: speculative-join time belongs to
@@ -267,4 +302,5 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         total_seconds=time.perf_counter() - t_start,
         dispatches=runtime.stats.dispatches, compiles=runtime.stats.compiles,
         straggler_events=straggler_events,
-        overlap_seconds=runtime.stats.overlap_seconds - overlap_start)
+        overlap_seconds=runtime.stats.overlap_seconds - overlap_start,
+        decisions=controller.decision_rows(decisions_mark))

@@ -1,0 +1,299 @@
+"""CostController: the stack's three ETDPC-style decisions, one cost model
+(DESIGN.md §9).
+
+The paper's deepest idea — decide how much work to fuse into the next phase
+from the *measured elapsed time* of preceding ones — used to live in four
+divergent copies (pass-combining policies, the stream re-mine trigger, the
+serving fusion policy, the autotuner's private timing loop), each with its
+own ad-hoc thresholds.  The controller puts them behind one calibrated
+:class:`~repro.costmodel.model.CostModel` and exposes the decision
+primitives the stack needs:
+
+* :meth:`choose_width`   — predicted cost of ``w`` fused passes vs ``w``
+  separate jobs → the ``measured`` pass-combining policy (the paper-faithful
+  SPC…Optimized-ETDPC transcriptions stay untouched as baselines);
+* :meth:`should_remine`  — predicted full-remine cost at the *current*
+  window size vs accumulated delta-counting cost (StreamMiner);
+* :meth:`choose_fusion`  — serving micro-batch depth under a latency budget
+  (RuleServeEngine / ServeEngine).
+
+Every decision is appended to :attr:`decisions` — what was predicted, what
+was chosen, and (once known) what was measured — the per-decision telemetry
+``launch/report.py`` renders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.roofline import count_job_ops
+
+from .measure import device_key
+from .model import CostModel, default_model
+
+MAX_DECISIONS = 4096     # telemetry ring: keep the newest decisions
+
+
+@dataclasses.dataclass
+class Decision:
+    """One adaptive decision: prediction → choice → (later) measurement."""
+    site: str                 # "pass_width" | "speculate" | "remine" |
+                              # "serve_fusion" | "decode_fusion"
+    key: str                  # cost-model key consulted
+    predicted: dict           # option → predicted seconds (or {"cost": x})
+    chosen: object            # the decision taken
+    measured: float | None = None   # realized seconds, filled by observe_*
+
+    def as_dict(self) -> dict:
+        return {"site": self.site, "key": self.key, "chosen": self.chosen,
+                "predicted": {str(k): float(v)
+                              for k, v in self.predicted.items()},
+                "measured": self.measured}
+
+
+class CostController:
+    """Decision engine over a (usually shared) :class:`CostModel`.
+
+    Args:
+      model: the calibrated fit store; defaults to the process-wide shared
+        model so every site contributes to — and benefits from — the same
+        calibration.
+      max_width: widest phase :meth:`choose_width` may pick (the paper's
+        drivers never exceed α=3; the measured policy keeps that ceiling by
+        default but it is a knob, not a transcription).
+      spec_hide_fraction: speculate only when the predicted in-flight count
+        time is at least this fraction of the last measured speculative-join
+        cost — below it there is no window to hide the join in.
+    """
+
+    def __init__(self, model: CostModel | None = None, *, max_width: int = 3,
+                 spec_hide_fraction: float = 0.25,
+                 backend: str | None = None):
+        self.model = model if model is not None else default_model()
+        self.max_width = max(int(max_width), 1)
+        self.spec_hide_fraction = spec_hide_fraction
+        self.device = device_key(backend)
+        self.decisions: list[Decision] = []
+        # mining count-job context (set by drivers.mine before the loop)
+        self._count_impl = "default"
+        self._count_txns = 1
+        self._count_words = 1
+        self._last_spec_seconds: float | None = None
+
+    # -- telemetry -------------------------------------------------------------
+
+    def _record(self, dec: Decision) -> Decision:
+        self.decisions.append(dec)
+        if len(self.decisions) > MAX_DECISIONS:
+            del self.decisions[:len(self.decisions) - MAX_DECISIONS]
+        return dec
+
+    def decision_rows(self, since: int = 0) -> list:
+        """Decisions (as dicts) appended at index ``since`` or later."""
+        return [d.as_dict() for d in self.decisions[since:]]
+
+    # -- count jobs (mining phase loop) ----------------------------------------
+
+    def set_count_context(self, *, n_txns: int, n_words: int,
+                          impl: str) -> None:
+        """Pin the per-run constants of the counting-ops basis (DESIGN.md §9):
+        within one mine() run, job work varies only with candidate count."""
+        self._count_txns = max(int(n_txns), 1)
+        self._count_words = max(int(n_words), 1)
+        self._count_impl = impl
+
+    @property
+    def count_key(self) -> str:
+        return f"{self.device}/{self._count_impl}/count"
+
+    def _count_ops(self, n_candidates: float) -> float:
+        return count_job_ops(max(int(n_candidates), 1), self._count_txns,
+                             self._count_words)
+
+    def observe_count(self, n_candidates: int, seconds: float) -> None:
+        """Calibrate from one completed counting job (any policy, any run)."""
+        self.model.observe(self.count_key, self._count_ops(n_candidates),
+                           seconds)
+        # realized time goes to the newest unmeasured width decision
+        for d in reversed(self.decisions):
+            if d.site == "pass_width":
+                if d.measured is None:
+                    d.measured = float(seconds)
+                break
+
+    def predict_count(self, n_candidates: int) -> float | None:
+        return self.model.predict(self.count_key,
+                                  self._count_ops(n_candidates))
+
+    def choose_width(self, prev, prev2) -> float | None:
+        """Pick the candidate budget α minimizing predicted cost per level.
+
+        ``prev``/``prev2`` are PhaseStats-shaped (n_candidates,
+        n_frequent_last, elapsed).  The chosen α executes with the drivers'
+        *budget* semantics — candidate generation stops once the fused phase
+        has spent α·|L| candidates — so the un-pruned tail can never explode
+        past what the model priced in: a fused phase costs at most one job
+        overhead ``a`` plus ``b``·ops(α·|L|), whatever the lattice does.
+        The number of levels that budget covers is extrapolated from the
+        observed |C| trajectory; minimizing ``(a + b·ops)/levels`` trades
+        exactly the paper's pair — saved job setups against un-pruned
+        counting work.  Returns α, or None when the model is uncalibrated
+        (caller falls back to the paper's ETDPC table).
+        """
+        fit = self.model.fit(self.count_key)
+        coeffs = fit.coeffs()
+        if coeffs is None or prev is None:
+            return None
+        a, b = coeffs
+        c_next = max(prev.n_frequent_last, 1)
+        # per-level candidate estimates ĉ_j for the next fused phase
+        if prev2 is None:
+            # deciding right after Job1: level 2 is the complete pair join
+            # over |L1| frequent items, and each further *un-pruned* level of
+            # a fused phase joins the complete level below it — so level 2+j
+            # is exactly C(|L1|, 2+j) candidates.  This is what makes fusing
+            # here dangerous (the binomial mid-levels dwarf the pruned
+            # trajectory ETDPC's width-1 phases would see) and the estimate
+            # prices that in exactly.
+            est = [float(min(math.comb(c_next, 2 + j), 10 ** 15))
+                   for j in range(self.max_width)]
+            max_w = self.max_width
+        else:
+            growth = prev.n_candidates / max(prev2.n_candidates, 1)
+            growth = min(max(growth, 0.25), 16.0)
+            c0 = max(prev.n_candidates * growth, 1.0)
+            max_w = self.max_width
+            est = [c0 * growth ** j for j in range(max_w)]
+        cum = [sum(est[:j + 1]) for j in range(max_w)]
+        predicted: dict = {}
+        best_w, best_per_level = 1, float("inf")
+        for w in range(1, max_w + 1):
+            # a fused phase covering w levels counts all of them in one job
+            cost = a + b * self._count_ops(cum[w - 1])
+            predicted[w] = cost
+            if cost / w < best_per_level:
+                best_per_level, best_w = cost / w, w
+        self._record(Decision("pass_width", self.count_key, predicted,
+                              best_w))
+        if best_w == 1:
+            return 1.0
+        # budget that executes exactly best_w levels *on these estimates*:
+        # the drivers append a level, then stop once the cumulative count
+        # exceeds α·|L| — so any α with S_{w-2} ≤ α·|L| < S_{w-1} covers w
+        # levels; the midpoint is robust to estimate noise on both sides.
+        # If the real lattice outgrows the estimates, generation stops
+        # early and the overshoot is bounded by the one level the paper's
+        # budget drivers also risk.
+        alpha = (cum[best_w - 2] + cum[best_w - 1]) / (2.0 * c_next)
+        return max(alpha, 1.0)
+
+    # -- speculative-join sizing (drivers) -------------------------------------
+
+    def observe_spec(self, seconds: float) -> None:
+        """Record the measured cost of one speculative next-phase join."""
+        if seconds > 0:
+            self._last_spec_seconds = float(seconds)
+
+    def should_speculate(self, est_candidates: int) -> bool:
+        """Speculate only when the predicted count-job time leaves a window
+        worth hiding the join in.  Permissive by default: with no calibration
+        or no measured join cost yet, speculate (the pre-refactor behavior —
+        the survival-rate gate in ``drivers.mine`` still applies first)."""
+        predicted = self.predict_count(est_candidates)
+        if predicted is None or self._last_spec_seconds is None:
+            return True
+        ok = predicted >= self.spec_hide_fraction * self._last_spec_seconds
+        self._record(Decision(
+            "speculate", self.count_key,
+            {"count_job": predicted, "join": self._last_spec_seconds}, ok,
+            measured=predicted))
+        return ok
+
+    # -- stream re-mine trigger (StreamMiner) ----------------------------------
+
+    @property
+    def remine_key(self) -> str:
+        return f"{self.device}/{self._count_impl}/remine"
+
+    def observe_remine(self, window_rows: int, seconds: float) -> None:
+        """Calibrate from one completed full re-mine of ``window_rows``."""
+        self.model.observe(self.remine_key, max(int(window_rows), 1), seconds)
+
+    def predict_remine(self, window_rows: int) -> float | None:
+        """Predicted full-remine seconds at the *current* window size — the
+        cold-start fix: a tiny init-time mine no longer freezes the estimate
+        (ops basis = window rows, so one sample already extrapolates
+        proportionally as the window grows)."""
+        return self.model.predict(self.remine_key, max(int(window_rows), 1))
+
+    def should_remine(self, *, drift: float, staleness_seconds: float,
+                      window_rows: int, staleness_factor: float,
+                      fallback_seconds: float | None = None) -> bool:
+        """ETDPC-style opportunistic trigger: re-mine when the accumulated
+        delta-path cost, scaled by window churn, exceeds the predicted cost
+        of re-mining now."""
+        predicted = self.predict_remine(window_rows)
+        if predicted is None:
+            predicted = fallback_seconds
+        if predicted is None or window_rows <= 0:
+            return False
+        fire = drift * staleness_seconds > staleness_factor * predicted
+        self._record(Decision(
+            "remine", self.remine_key,
+            {"remine": predicted, "accumulated": drift * staleness_seconds},
+            fire))
+        return fire
+
+    # -- serving micro-batch fusion (RuleServeEngine / ServeEngine) ------------
+
+    def serve_key(self, kind: str = "rule_serve") -> str:
+        return f"{self.device}/{kind}/dispatch"
+
+    def observe_serve(self, work_per_unit: float, n_units: int,
+                      seconds: float, kind: str = "rule_serve") -> None:
+        """Calibrate from one serving dispatch (``n_units`` fused units of
+        ``work_per_unit`` ops each — queries·rules·words for rule serving,
+        batch rows for decode steps)."""
+        self.model.observe(self.serve_key(kind),
+                           max(work_per_unit, 1.0) * max(int(n_units), 1),
+                           seconds)
+        for d in reversed(self.decisions):
+            if d.site.endswith("_fusion"):
+                if d.measured is None:
+                    d.measured = float(seconds)
+                break
+
+    def choose_fusion(self, *, work_per_unit: float, queued: int,
+                      max_fuse: int, latency_budget_s: float | None = None,
+                      kind: str = "rule_serve") -> int | None:
+        """Units (query batches / decode steps) to fuse into one dispatch.
+
+        With a latency budget: the widest fusion whose predicted dispatch
+        time fits the budget (always at least 1 — a budget no single unit
+        meets degrades to per-unit dispatch, the honest floor).  Without one:
+        fuse maximally — per-unit cost ``(a + b·f·ops)/f`` is non-increasing
+        in ``f``, so the only reason to hold back is latency.  Returns None
+        when the model is uncalibrated (caller falls back to its policy).
+        """
+        key = self.serve_key(kind)
+        if self.model.n_samples(key) == 0:
+            return None
+        cap = max(min(int(queued), int(max_fuse)), 1)
+        predicted: dict = {}
+        chosen = cap
+        if latency_budget_s is not None:
+            chosen = 1
+            for f in range(1, cap + 1):
+                t = self.model.predict(key, max(work_per_unit, 1.0) * f)
+                predicted[f] = t
+                if t is not None and t <= latency_budget_s:
+                    chosen = f
+        else:
+            predicted[cap] = self.model.predict(
+                key, max(work_per_unit, 1.0) * cap)
+        self._record(Decision(f"{kind}_fusion"
+                              if not kind.endswith("_fusion") else kind,
+                              key, {str(k): v for k, v in predicted.items()
+                                    if v is not None}, chosen))
+        return chosen

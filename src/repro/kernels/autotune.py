@@ -14,9 +14,17 @@ synthetic data and caches the winner:
 Interpret-mode Pallas (and the Pallas kernels off-TPU generally) are never
 timed: interpret timings are meaningless, so defaults are returned.
 
-Cache format (DESIGN.md §5)::
+Cache format (DESIGN.md §5, §9)::
 
-    {"cpu/vertical/C4096/T1024/W8/k5": {"block": 2048}, ...}
+    {"cpu:cpu/vertical/C4096/T1024/W8/k5": {"block": 2048}, ...}
+
+Keys lead with the concrete device identity (``backend:device_kind`` from
+``costmodel.measure.device_key``), not just the JAX backend name — a cache
+written on one TPU generation must not silently pin block sizes on another.
+Legacy ``backend/...`` entries written before device-kind keying are migrated
+in place: adopted under the new key on first lookup, no re-sweep.  The timing
+loop itself is the shared ``costmodel.measure.time_once`` (one measurement
+discipline across autotuner and cost model).
 
 Shape buckets are next-pow2 of the padded candidate/transaction extents, so a
 whole mining run touches only a handful of keys.
@@ -26,11 +34,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.costmodel.measure import device_key, time_once
 
 DEFAULTS = {
     "jnp": {"txn_block": 4096},
@@ -102,15 +111,8 @@ def _bucket(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
-def _time_once(fn) -> float:
-    out = fn()                      # warm-up: compile + first run
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(2):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+# timing now shared with the cost model; alias kept for older callers/tests
+_time_once = time_once
 
 
 def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
@@ -236,19 +238,26 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     if untunable:
         return dict(DEFAULTS.get(impl, {}))
 
-    key = (f"{backend}/{impl}/C{_bucket(C)}/T{_bucket(T)}/W{W}/k{kmax}")
+    shape = f"{impl}/C{_bucket(C)}/T{_bucket(T)}/W{W}/k{kmax}"
+    key = f"{device_key(backend)}/{shape}"
     if key in _memory_cache:
         return dict(_memory_cache[key])
     disk = _load_disk()
     if key in disk:
         _memory_cache[key] = dict(disk[key])
         return dict(disk[key])
+    legacy = f"{backend}/{shape}"      # pre-device-kind cache entries
+    if legacy in disk:
+        disk[key] = dict(disk.pop(legacy))
+        _memory_cache[key] = dict(disk[key])
+        _save_disk(disk)
+        return dict(disk[key])
 
     make = _candidate_runner(impl, _bucket(C), _bucket(T), W, kmax)
     best_cfg, best_t = None, float("inf")
     for cfg in CONFIGS[impl]:
         try:
-            t = _time_once(make(cfg))
+            t = time_once(make(cfg))
         except Exception:       # a config can be invalid for exotic shapes
             continue
         if t < best_t:

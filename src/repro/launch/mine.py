@@ -12,6 +12,7 @@ import json
 from repro.core import ALGORITHMS, mine
 from repro.core.mapreduce import IMPLS, MapReduceRuntime
 from repro.data import dataset_by_name, load_transactions
+from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
 
 
 def main():
@@ -29,6 +30,7 @@ def main():
                     help="counting impl (auto: pallas on TPU, vertical "
                          "elsewhere)")
     ap.add_argument("--json-out", default=None)
+    add_policy_args(ap)
     args = ap.parse_args()
 
     if args.input:
@@ -39,6 +41,7 @@ def main():
     runtime = MapReduceRuntime(impl=None if args.impl == "auto" else args.impl)
     res = mine(txns, n_items=n_items, min_sup=args.min_sup,
                algorithm=args.algorithm, runtime=runtime,
+               policy_kwargs=policy_kwargs_from_args(args, args.algorithm),
                checkpoint_dir=args.checkpoint_dir)
 
     print(f"algorithm={res.algorithm} min_sup={res.min_sup} "
@@ -52,11 +55,15 @@ def main():
               f"(gen {ph.gen_seconds:.3f} count {ph.count_seconds:.3f})")
     sizes = {k: int(v[0].shape[0]) for k, v in sorted(res.levels.items())}
     print("frequent itemsets per level:", sizes)
+    if res.decisions:
+        print(f"cost-model decisions: {len(res.decisions)} "
+              f"(render with `python -m repro.launch.report --decisions`)")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump({"levels": sizes, "phases": res.n_phases,
                        "total_seconds": res.total_seconds,
-                       "dispatches": res.dispatches}, f, indent=2)
+                       "dispatches": res.dispatches,
+                       "decisions": res.decisions}, f, indent=2)
 
 
 if __name__ == "__main__":

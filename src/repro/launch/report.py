@@ -1,12 +1,14 @@
-"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.jsonl.
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.jsonl —
+and, with ``--decisions``, the cost-model §Decisions table (DESIGN.md §9).
 
   PYTHONPATH=src python -m repro.launch.report results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.report --decisions results/decisions.jsonl
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 from collections import defaultdict
 
 
@@ -80,9 +82,71 @@ def pick_hillclimb(cells):
     return worst[0], coll[0]
 
 
+def decision_table(rows) -> str:
+    """Per-decision telemetry (CostController.decision_rows dicts): one line
+    per adaptive decision — what the model predicted, what was chosen, what
+    was then measured, and the prediction error where both are known."""
+    out = ["| site | model key | predicted (s) | chosen | measured s | rel err |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        pred = r.get("predicted") or {}
+        pred_s = ", ".join(f"{k}:{v:.2e}" for k, v in sorted(pred.items()))
+        chosen, measured = r.get("chosen"), r.get("measured")
+        err = "–"
+        p_chosen = pred.get(str(chosen))
+        if p_chosen is not None and measured:
+            err = f"{abs(p_chosen - measured) / measured:.2f}"
+        m_s = fmt_s(measured) if measured is not None else "–"
+        out.append(f"| {r.get('site')} | {r.get('key')} | {pred_s or '—'} | "
+                   f"{chosen} | {m_s} | {err} |")
+    return "\n".join(out)
+
+
+def decision_summary(rows) -> str:
+    by_site: dict = defaultdict(list)
+    for r in rows:
+        p = (r.get("predicted") or {}).get(str(r.get("chosen")))
+        if p is not None and r.get("measured"):
+            by_site[r.get("site")].append(
+                abs(p - r["measured"]) / r["measured"])
+    lines = [f"{len(rows)} decisions recorded"]
+    for site, errs in sorted(by_site.items()):
+        lines.append(f"  {site}: {len(errs)} measured, "
+                     f"mean |rel err| {sum(errs)/len(errs):.2f}")
+    return "\n".join(lines)
+
+
+def load_decisions(path) -> list:
+    """Decision rows from a jsonl stream, a bare JSON list, or any JSON
+    object with a ``decisions`` list (e.g. ``launch.mine --json-out``)."""
+    text = open(path).read()
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        return [json.loads(l) for l in text.splitlines() if l.strip()]
+    return doc.get("decisions", []) if isinstance(doc, dict) else doc
+
+
+def report_decisions(path):
+    rows = load_decisions(path)
+    print(f"## Cost-model decisions ({path})\n")
+    print(decision_summary(rows))
+    print()
+    print(decision_table(rows))
+
+
 def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
-    cells = load(path)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="results/dryrun.jsonl")
+    ap.add_argument("--decisions", metavar="JSONL", default=None,
+                    help="render the cost-model decision telemetry table from "
+                         "a jsonl of CostController.decision_rows dicts "
+                         "instead of the dry-run tables")
+    args = ap.parse_args()
+    if args.decisions:
+        report_decisions(args.decisions)
+        return
+    cells = load(args.path)
     n_ok = sum(1 for r in cells.values() if r.get("ok"))
     n_skip = sum(1 for r in cells.values() if r.get("skipped"))
     n_fail = len(cells) - n_ok - n_skip

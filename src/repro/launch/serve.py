@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.core.policy import ALGORITHMS
+from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
 from repro.models import build_model
 from repro.serving import ServeEngine
 
@@ -27,6 +28,7 @@ def main():
                     choices=sorted(ALGORITHMS))
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
+    add_policy_args(ap)
     args = ap.parse_args()
 
     model = build_model(args.arch, smoke=args.smoke)
@@ -38,7 +40,10 @@ def main():
 
     eng = ServeEngine(model, params,
                       cache_len=args.prompt_len + args.max_new + 8,
-                      algorithm=args.algorithm)
+                      algorithm=args.algorithm,
+                      policy_kwargs=policy_kwargs_from_args(
+                          args, args.algorithm),
+                      latency_budget_ms=args.latency_budget_ms)
     toks, records = eng.generate(prompts, max_new_tokens=args.max_new,
                                  eos_id=args.eos_id)
     total_t = sum(r.elapsed for r in records)

@@ -21,6 +21,7 @@ from repro.core import generate_ruleset, mine
 from repro.core.mapreduce import MapReduceRuntime
 from repro.core.policy import ALGORITHMS
 from repro.data import dataset_by_name, load_transactions
+from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
 from repro.serving import RULE_IMPLS, RuleServeEngine
 from repro.serving.common import latency_ms
 
@@ -60,6 +61,7 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--max-fuse", type=int, default=16)
     ap.add_argument("--json-out", default=None)
+    add_policy_args(ap)
     args = ap.parse_args()
 
     if args.input:
@@ -89,7 +91,10 @@ def main():
         print("nothing to serve; raise --queries")
         return
     eng = RuleServeEngine(rules, top_k=args.top_k, impl=args.impl,
-                          algorithm=args.algorithm, max_fuse=args.max_fuse)
+                          algorithm=args.algorithm, max_fuse=args.max_fuse,
+                          policy_kwargs=policy_kwargs_from_args(
+                              args, args.algorithm),
+                          latency_budget_ms=args.latency_budget_ms)
     eng.warmup(args.batch * args.max_fuse)      # compile buckets + autotune
     t0 = time.perf_counter()
     results, records = eng.serve(batches)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.policy import ALGORITHMS
 from repro.data import dataset_by_name, load_transactions
+from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
 from repro.launch.serve_rules import make_queries
 from repro.serving.common import latency_percentiles
 from repro.stream import StreamMiner
@@ -54,6 +55,7 @@ def main():
     ap.add_argument("--queries-per-update", type=int, default=8,
                     help="live recommendation queries after each update (0=off)")
     ap.add_argument("--json-out", default=None)
+    add_policy_args(ap)
     args = ap.parse_args()
 
     if args.input:
@@ -70,6 +72,7 @@ def main():
         algorithm=args.algorithm, min_confidence=args.min_conf,
         impl=args.impl, staleness_factor=args.staleness_factor,
         track_margin=args.track_margin,
+        policy_kwargs=policy_kwargs_from_args(args, args.algorithm),
         serve_kwargs={"top_k": args.top_k})
 
     # prefill: bring the window to capacity (one re-mine builds the tables)

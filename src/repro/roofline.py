@@ -35,6 +35,32 @@ HW = {
     "link_bw": 50e9,        # bytes/s per ICI link
 }
 
+
+# -- measured-ops basis for the counting side (DESIGN.md §9) -------------------
+#
+# The cost-model subsystem (repro/costmodel/) fits per-(device, impl, kind)
+# affine models  t ≈ a + b·ops  where ``ops`` is the job's work in this basis.
+# The basis is deliberately the *horizontal* §3 form — candidate-word
+# comparisons — for every impl: vertical/delta layouts do proportionally less
+# word work, but the constant of proportionality is absorbed by the per-key
+# slope ``b``, so the affine family is the same and fits never mix bases.
+
+def count_job_ops(n_candidates: int, n_txns: int, n_words: int = 1) -> float:
+    """Work of one support-counting job in the measured-ops basis: C·T·W
+    candidate-word comparisons (each of C candidates tested against each of
+    T transactions over W mask words)."""
+    return float(max(int(n_candidates), 1)) * max(int(n_txns), 1) * \
+        max(int(n_words), 1)
+
+
+def predicted_vs_achieved(predicted_s: float, achieved_s: float) -> dict:
+    """One predicted-vs-measured comparison row (cost-model telemetry)."""
+    ratio = predicted_s / achieved_s if achieved_s > 0 else float("inf")
+    rel_err = (abs(predicted_s - achieved_s) / achieved_s
+               if achieved_s > 0 else float("inf"))
+    return {"predicted_s": float(predicted_s), "achieved_s": float(achieved_s),
+            "ratio": float(ratio), "abs_rel_err": float(rel_err)}
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

@@ -12,8 +12,10 @@ The isomorphism to the paper (DESIGN.md §3):
   un-pruned candidates      ≙ tokens emitted past EOS — wasted work that cannot
                               corrupt output (trimmed like infrequent candidates)
 
-Seven algorithms, same Policy objects as the mining drivers: spc (1 step per
-dispatch), fpc (fixed), dpc, vfpc, etdpc and the optimized_* variants.
+Seven paper algorithms, same Policy objects as the mining drivers: spc (1 step
+per dispatch), fpc (fixed), dpc, vfpc, etdpc and the optimized_* variants —
+plus ``measured``, which fuses from the calibrated cost model under an
+optional latency budget (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -44,11 +46,18 @@ class ServeEngine:
     def __init__(self, model: Model, params, cache_len: int,
                  algorithm: str = "optimized_vfpc", mesh=None, rules=None,
                  policy_kwargs: dict | None = None, max_npass: int = 32,
-                 pad_id: int = 0, pipeline_depth: int = 1):
+                 pad_id: int = 0, pipeline_depth: int = 1,
+                 latency_budget_ms: float | None = None, controller=None):
         """``pipeline_depth > 1`` (optimized engines only): keep that many
         fused phases in flight and read results one phase behind — the host
         EOS check ("pruning") lags the dispatch stream, trading a few more
-        post-EOS tokens for zero host-sync bubbles between phases."""
+        post-EOS tokens for zero host-sync bubbles between phases.
+
+        ``algorithm="measured"`` fuses decode steps from the calibrated cost
+        model (DESIGN.md §9): the widest phase whose predicted dispatch time
+        fits ``latency_budget_ms`` (maximal fusion when no budget is set).
+        ``controller`` shares a :class:`repro.costmodel.CostController`; any
+        engine given one calibrates it per dispatch, whatever its policy."""
         self.model = model
         self.params = params
         self.cache_len = cache_len
@@ -56,7 +65,16 @@ class ServeEngine:
         self.ctx = ShardCtx(mesh, rules)
         policy_cls, self.optimized = ALGORITHMS[algorithm]
         self.algorithm = algorithm
-        self.policy = policy_cls(**(policy_kwargs or {}))
+        self.latency_budget_s = (None if latency_budget_ms is None
+                                 else float(latency_budget_ms) / 1e3)
+        if algorithm == "measured":
+            if controller is None:
+                from repro.costmodel import CostController
+                controller = CostController()
+            self.policy = None
+        else:
+            self.policy = policy_cls(**(policy_kwargs or {}))
+        self.controller = controller
         self.max_npass = max_npass
         self.pad_id = pad_id
         self.pipeline_depth = pipeline_depth if self.optimized else 1
@@ -146,19 +164,31 @@ class ServeEngine:
                     else:
                         out[b, produced + j] = toks[b, j]
             produced += npass
+            if self.controller is not None:
+                self.controller.observe_serve(float(B), npass, elapsed,
+                                              kind="decode")
             history.append(PhaseStats(npass * active, active, elapsed))
             self.records.append(ServePhaseRecord(
                 pidx, npass, active, npass * active, wasted, elapsed))
 
         while scheduled < max_new_tokens and not eos_seen_host.all():
-            prev = history[-1] if history else None
-            prev2 = history[-2] if len(history) > 1 else None
-            mode, val = self.policy.decide(prev, prev2)
             active = int((~eos_seen_host).sum())
-            if mode == "width":
-                npass = int(val)
-            else:  # budget: passes while cumulative candidates ≤ α·active
-                npass = int(np.floor(val)) + 1
+            if self.policy is None:   # measured: decode-step fusion from the
+                                      # cost model (ops basis: batch rows/step)
+                npass = self.controller.choose_fusion(
+                    work_per_unit=float(B),
+                    queued=max_new_tokens - scheduled,
+                    max_fuse=self.max_npass,
+                    latency_budget_s=self.latency_budget_s, kind="decode")
+                npass = 1 if npass is None else int(npass)
+            else:
+                prev = history[-1] if history else None
+                prev2 = history[-2] if len(history) > 1 else None
+                mode, val = self.policy.decide(prev, prev2)
+                if mode == "width":
+                    npass = int(val)
+                else:  # budget: passes while cumulative candidates ≤ α·active
+                    npass = int(np.floor(val)) + 1
             npass = max(1, min(npass, self.max_npass, max_new_tokens - scheduled))
 
             fn = self._multi_step(npass, masked=not self.optimized)

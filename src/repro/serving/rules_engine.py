@@ -110,6 +110,12 @@ class RuleServeEngine:
         (clamped to the rule count; a bound, not a guarantee, when one
         consequent dominates more than that many rules).
       autotune: consult the block-size autotuner; False pins static defaults.
+      latency_budget_ms: per-dispatch latency budget for the ``measured``
+        algorithm — fuse the most batches whose predicted dispatch time
+        stays under it (None: fuse maximally, pure throughput).
+      controller: :class:`repro.costmodel.CostController` for the
+        ``measured`` algorithm's fusion decisions (DESIGN.md §9); default
+        shares the process-wide model.
     """
 
     def __init__(self, rules: RuleSet, *, top_k: int = 5, impl: str = "auto",
@@ -117,7 +123,8 @@ class RuleServeEngine:
                  policy_kwargs: dict | None = None, max_fuse: int = 16,
                  exclude_contained: bool = True,
                  dedup_consequents: bool = True, overfetch: int = 8,
-                 autotune: bool = True):
+                 autotune: bool = True, latency_budget_ms: float | None = None,
+                 controller=None):
         if impl not in RULE_IMPLS:
             raise ValueError(f"unknown impl {impl!r}; options: {RULE_IMPLS}")
         if algorithm not in ALGORITHMS:
@@ -135,9 +142,22 @@ class RuleServeEngine:
         self.dedup_consequents = dedup_consequents
         self.overfetch = max(int(overfetch), 1)
         self.autotune = autotune
-        policy_cls, _ = ALGORITHMS[algorithm]
         self.algorithm = algorithm
-        self.policy = policy_cls(**(policy_kwargs or {}))
+        self.latency_budget_s = (None if latency_budget_ms is None
+                                 else float(latency_budget_ms) / 1e3)
+        if algorithm == "measured":
+            # cost-model fusion: no Policy object — choose_fusion is the
+            # serving primitive (DESIGN.md §9)
+            if controller is None:
+                from repro.costmodel import CostController
+                controller = CostController()
+            self.policy = None
+        else:
+            policy_cls, _ = ALGORITHMS[algorithm]
+            self.policy = policy_cls(**(policy_kwargs or {}))
+        # a controller passed alongside a paper policy still observes every
+        # dispatch, so baseline runs calibrate the model the measured mode uses
+        self.controller = controller
 
         self._state = _RuleState(rules)
         self.records: list[RuleServeRecord] = []
@@ -288,14 +308,23 @@ class RuleServeEngine:
 
         i, phase_idx = 0, 0
         while i < len(batches):
-            prev = history[-1] if history else None
-            prev2 = history[-2] if len(history) > 1 else None
-            mode, val = self.policy.decide(prev, prev2)
-            if mode == "width":
-                nfuse = int(val)
-            else:  # budget_alpha: fuse ⌊α⌋ queued batches (α=1 ⇒ per-batch,
-                   # matching the drivers' "no widening" baseline semantics)
-                nfuse = int(np.floor(val))
+            if self.policy is None:   # measured: predicted latency vs budget
+                work = float(n_rules) * state.W * max(len(batches[i]), 1)
+                nfuse = self.controller.choose_fusion(
+                    work_per_unit=work, queued=len(batches) - i,
+                    max_fuse=self.max_fuse,
+                    latency_budget_s=self.latency_budget_s)
+                # uncalibrated: dispatch one batch — it is the calibration
+                nfuse = 1 if nfuse is None else int(nfuse)
+            else:
+                prev = history[-1] if history else None
+                prev2 = history[-2] if len(history) > 1 else None
+                mode, val = self.policy.decide(prev, prev2)
+                if mode == "width":
+                    nfuse = int(val)
+                else:  # budget_alpha: fuse ⌊α⌋ queued batches (α=1 ⇒
+                       # per-batch, the drivers' "no widening" semantics)
+                    nfuse = int(np.floor(val))
             nfuse = max(1, min(nfuse, self.max_fuse, len(batches) - i))
             group = batches[i:i + nfuse]
             sizes = [len(b) for b in group]
@@ -317,6 +346,9 @@ class RuleServeEngine:
                 results.append(decoded[off:off + sz])
                 off += sz
             n_q = len(flat)
+            if self.controller is not None and n_q:
+                self.controller.observe_serve(float(n_rules) * state.W,
+                                              n_q, elapsed)
             history.append(PhaseStats(n_rules * max(n_q, 1),
                                       max(n_q, 1), elapsed))
             records.append(RuleServeRecord(phase_idx, nfuse, n_q, elapsed))

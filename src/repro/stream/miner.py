@@ -14,11 +14,14 @@ Every window mutation takes one of two paths:
 
 Re-mining triggers ETDPC-style: *mandatorily* when the cascade reports
 structural drift (a needed candidate is untracked — its count is unknown),
-and *opportunistically* when ``drift × staleness`` exceeds the measured
-re-mine cost — ``drift`` being the fraction of the window churned since the
-last re-mine and ``staleness`` the delta-counting seconds accumulated since
-then; like the paper's ETDPC driver, the decision compares *measured elapsed
-times* rather than modeled costs.
+and *opportunistically* when ``drift × staleness`` exceeds the *predicted*
+cost of re-mining the current window — ``drift`` being the fraction of the
+window churned since the last re-mine and ``staleness`` the delta-counting
+seconds accumulated since then.  The prediction comes from the shared
+:class:`~repro.costmodel.CostController` (DESIGN.md §9), calibrated from
+every completed re-mine: unlike the raw last-measured seconds it replaced,
+it scales with the window, so a tiny init-time mine no longer freezes the
+estimate far below the true post-growth re-mine cost (the cold-start bug).
 
 Either way the published state is exact: frequent itemsets, supports and the
 generated :class:`~repro.core.rules.RuleSet` are byte-identical to a
@@ -83,7 +86,13 @@ class StreamMiner:
       impl: delta-counting implementation ("auto": pallas on TPU, jnp
         elsewhere; "pallas" off-TPU degrades to interpret mode).
       staleness_factor: β-style scale on the re-mine trigger — re-mine when
-        ``drift × staleness > staleness_factor × measured_remine_seconds``.
+        ``drift × staleness > staleness_factor × predicted_remine_seconds``.
+      controller: a :class:`repro.costmodel.CostController` shared with the
+        embedded ``mine()`` calls; predicts re-mine cost at the current
+        window size and records per-decision telemetry.  Default: a
+        controller on the process-wide shared model.
+      policy_kwargs: hyperparameters for the re-mine driver's policy
+        (``time_scale``, β's, ... — forwarded to ``mine()``).
       track_margin: fractional support headroom of the tracked tables
         (see ``tables.build_tracked_levels``): larger margins absorb more
         near-threshold churn on the delta path at the cost of tracking (and
@@ -107,7 +116,8 @@ class StreamMiner:
                  track_margin: float = 0.1,
                  refresh_rules: bool = True, warm_queries: int = 0,
                  oracle_check: bool = False,
-                 serve_kwargs: dict | None = None, autotune: bool = True):
+                 serve_kwargs: dict | None = None, autotune: bool = True,
+                 controller=None, policy_kwargs: dict | None = None):
         if algorithm not in ALGORITHMS:
             raise ValueError(
                 f"unknown algorithm {algorithm!r}; options: {sorted(ALGORITHMS)}")
@@ -125,8 +135,13 @@ class StreamMiner:
         self.warm_queries = warm_queries
         self.oracle_check = oracle_check
         self.autotune = autotune
+        self.policy_kwargs = policy_kwargs
         self.window = TransactionWindow(n_items, capacity=capacity, mode=mode)
         self.runtime = runtime or MapReduceRuntime()
+        if controller is None:
+            from repro.costmodel import CostController
+            controller = CostController()
+        self.controller = controller
         self._tables: TrackedTables | None = None
         self._published: dict = {}
         self.engine = RuleServeEngine(
@@ -182,12 +197,22 @@ class StreamMiner:
             dispatches=self.runtime.stats.dispatches,
             compiles=self.runtime.stats.compiles)
 
+    def _predicted_remine_seconds(self) -> float | None:
+        """Re-mine cost predicted for the *current* window size — grows with
+        the window even when the only observation is the tiny init-time mine
+        (the cold-start under-prediction fix, DESIGN.md §9)."""
+        predicted = self.controller.predict_remine(self.window.size)
+        return predicted if predicted is not None else self._remine_seconds
+
     def _staleness_triggered(self) -> bool:
-        if self._remine_seconds is None or self.window.size == 0:
+        if self.window.size == 0 or self._remine_seconds is None:
             return False
         drift = self._rows_since_remine / self.window.size
-        return (drift * self._delta_seconds_accum
-                > self.staleness_factor * self._remine_seconds)
+        return self.controller.should_remine(
+            drift=drift, staleness_seconds=self._delta_seconds_accum,
+            window_rows=self.window.size,
+            staleness_factor=self.staleness_factor,
+            fallback_seconds=self._remine_seconds)
 
     def _remine(self) -> dict:
         """Full from-scratch mine + per-level border jobs; re-tightens the
@@ -196,7 +221,8 @@ class StreamMiner:
         contents = self.window.contents()
         res = mine(db_masks=contents, n_items=self.n_items,
                    min_sup=self.min_sup, algorithm=self.algorithm,
-                   runtime=self.runtime)
+                   runtime=self.runtime, controller=self.controller,
+                   policy_kwargs=self.policy_kwargs)
         db_sharded = self.runtime.scatter_db(contents, n_items=self.n_items)
 
         def count_fn(masks):
@@ -208,6 +234,9 @@ class StreamMiner:
             self.track_margin, count_fn)
         self._tables = TrackedTables(tracked)
         self._remine_seconds = time.perf_counter() - t0
+        # calibrate the predictor: one sample per completed re-mine, in the
+        # window-rows ops basis (mine + border jobs + table rebuild, end to end)
+        self.controller.observe_remine(self.window.size, self._remine_seconds)
         self._delta_seconds_accum = 0.0
         self._rows_since_remine = 0
         self.n_remines += 1

@@ -1,0 +1,347 @@
+"""Cost-model subsystem (DESIGN.md §9): affine-fit calibration, controller
+decision primitives, paper-policy bit-identity on recorded traces, persisted
+warm-starts, and the autotune cache's device-kind key migration."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.policy import (ALGORITHMS, DPCPolicy, ETDPCPolicy, FPCPolicy,
+                               MeasuredPolicy, PhaseStats, SPCPolicy,
+                               VFPCPolicy)
+from repro.costmodel import CostController, CostModel, device_key
+from repro.costmodel.model import (MIN_AFFINE_SAMPLES, OUTLIER_FACTOR,
+                                   AffineFit)
+
+
+def S(c, f, e):
+    return PhaseStats(n_candidates=c, n_frequent_last=f, elapsed=e)
+
+
+def _fresh_controller(**kw):
+    return CostController(CostModel(persist=False), **kw)
+
+
+def _calibrate_counts(ctl, a=1e-3, b=1e-9, counts=(100, 400, 1600, 6400)):
+    """Feed exact affine timings t = a + b·ops so the fit recovers (a, b)."""
+    for c in counts:
+        ctl.observe_count(c, a + b * ctl._count_ops(c))
+    return ctl
+
+
+# ---------------------------------------------------------------------------
+# AffineFit: calibration convergence, monotonicity, decay, outlier rejection
+# ---------------------------------------------------------------------------
+
+def test_affine_fit_converges_on_synthetic_timings():
+    rng = np.random.default_rng(0)
+    a, b = 5e-3, 2e-9
+    fit = AffineFit()
+    for x in rng.uniform(1e5, 1e8, 40):
+        fit.observe(x, (a + b * x) * rng.uniform(0.99, 1.01))
+    fa, fb = fit.coeffs()
+    assert fa == pytest.approx(a, rel=0.25)
+    assert fb == pytest.approx(b, rel=0.05)
+
+
+def test_affine_fit_ratio_estimate_below_min_samples():
+    """One sample answers immediately — through the origin, no intercept."""
+    fit = AffineFit()
+    fit.observe(1000.0, 0.01)
+    assert fit.coeffs() == (0.0, pytest.approx(1e-5))
+    assert fit.predict(2000.0) == pytest.approx(0.02)
+
+
+def test_predictions_monotone_in_ops():
+    """Slope is clamped ≥ 0: a wider phase never predicts cheaper."""
+    rng = np.random.default_rng(1)
+    fit = AffineFit()
+    # noise-dominated, slightly anti-correlated samples
+    for x in rng.uniform(1e3, 1e6, 20):
+        fit.observe(x, rng.uniform(0.009, 0.011) - 1e-9 * x)
+    xs = np.linspace(1e3, 1e7, 50)
+    preds = [fit.predict(x) for x in xs]
+    assert all(p2 >= p1 for p1, p2 in zip(preds, preds[1:]))
+
+
+def test_outlier_spike_rejected_after_calibration():
+    """A compile-spike sample far above the fit's own prediction is dropped;
+    moderate regime drift is still learned (decay handles it)."""
+    fit = AffineFit()
+    for x in (1e6, 2e6, 4e6, 8e6):
+        fit.observe(x, 1e-3 + 1e-9 * x)
+    n0, before = fit.n, fit.predict(1e6)
+    fit.observe(1e6, OUTLIER_FACTOR * 100 * before)      # jit spike
+    assert fit.n == n0 and fit.predict(1e6) == before
+    fit.observe(1e6, 2 * before)                         # plausible sample
+    assert fit.n == n0 + 1
+
+
+def test_decay_tracks_regime_change():
+    """After a sustained slowdown (below the spike-rejection factor) the
+    decayed fit re-converges on the new slope instead of averaging the
+    regimes forever."""
+    fit = AffineFit()
+    xs = [1e6, 3e6, 9e6, 27e6]
+    for x in xs * 3:
+        fit.observe(x, 1e-9 * x)
+    for x in xs * 8:                     # new regime: 5× slower per op
+        fit.observe(x, 5e-9 * x)
+    assert fit.predict(1e7) == pytest.approx(0.05, rel=0.25)
+
+
+def test_fit_ignores_degenerate_samples():
+    fit = AffineFit()
+    fit.observe(0.0, 1.0)
+    fit.observe(-5.0, 1.0)
+    fit.observe(float("nan"), 1.0)
+    fit.observe(1.0, float("inf"))
+    fit.observe(1.0, -0.1)
+    assert fit.n == 0 and fit.coeffs() is None
+
+
+# ---------------------------------------------------------------------------
+# CostModel: persistence + schema gating
+# ---------------------------------------------------------------------------
+
+def test_costmodel_persists_and_warm_starts(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_COSTMODEL_CACHE", str(tmp_path / "cm.json"))
+    m = CostModel(persist=True)
+    for i in range(1, 5):
+        m.observe("k", 1e6 * i, 1e-3 * i)
+    disk = json.load(open(tmp_path / "cm.json"))
+    assert disk["schema"] == CostModel.SCHEMA and "k" in disk["fits"]
+    m2 = CostModel(persist=True)         # next process warm-starts the fit
+    assert m2.n_samples("k") == 4
+    assert m2.predict("k", 2e6) == pytest.approx(m.predict("k", 2e6))
+
+
+def test_costmodel_discards_mismatched_schema(tmp_path, monkeypatch):
+    path = tmp_path / "cm.json"
+    monkeypatch.setenv("REPRO_COSTMODEL_CACHE", str(path))
+    path.write_text(json.dumps(
+        {"schema": CostModel.SCHEMA - 1,
+         "fits": {"k": {"n": 3, "sx": 1, "sy": 1, "sxx": 1, "sxy": 1}}}))
+    assert CostModel(persist=True).n_samples("k") == 0
+
+
+def test_device_key_has_backend_and_kind():
+    key = device_key()
+    backend, kind = key.split(":", 1)
+    assert backend and kind
+
+
+# ---------------------------------------------------------------------------
+# Paper policies: bit-identical decisions on a recorded PhaseStats trace
+# ---------------------------------------------------------------------------
+
+# a recorded optimized-run trajectory: explosive level 2-3, then collapse
+TRACE = [S(192, 60, 0.008), S(1770, 131, 0.012), S(34220, 97, 0.065),
+         S(1545, 40, 0.009), S(383, 12, 0.003), S(91, 3, 0.002)]
+
+
+def _replay(policy):
+    out = [policy.decide(None, None)]
+    out += [policy.decide(TRACE[i], TRACE[i - 1] if i else None)
+            for i in range(len(TRACE))]
+    return out
+
+
+def test_paper_policies_bit_identical_on_recorded_trace():
+    """The refactor must not move the paper baselines: exact golden decision
+    sequences for every transcription on one recorded trace."""
+    golden = {
+        SPCPolicy(): [("width", 1)] * 7,
+        FPCPolicy(): [("width", 3)] * 7,
+        DPCPolicy(): [("budget_alpha", a)
+                      for a in (1.0, 2.0, 2.0, 1.0, 2.0, 2.0, 2.0)],
+        VFPCPolicy(): [("width", w) for w in (2, 2, 2, 2, 5, 8, 11)],
+        ETDPCPolicy(): [("budget_alpha", a)
+                        for a in (1.0, 2.0, 3.0, 1.0, 3.0, 3.0, 3.0)],
+    }
+    for policy, want in golden.items():
+        assert _replay(policy) == want, policy.name
+
+
+def test_algorithm_registry_unchanged_plus_measured():
+    for name in ("spc", "fpc", "dpc", "vfpc", "etdpc",
+                 "optimized_vfpc", "optimized_etdpc", "measured"):
+        assert name in ALGORITHMS
+    assert ALGORITHMS["measured"] == (MeasuredPolicy, True)
+
+
+# ---------------------------------------------------------------------------
+# CostController: choose_width
+# ---------------------------------------------------------------------------
+
+def test_measured_policy_falls_back_to_etdpc_until_calibrated():
+    ctl = _fresh_controller()
+    pol, ref = MeasuredPolicy(controller=ctl), ETDPCPolicy()
+    for prev, prev2 in [(None, None), (TRACE[1], TRACE[0]),
+                        (TRACE[2], TRACE[1])]:
+        assert pol.decide(prev, prev2) == ref.decide(prev, prev2)
+    assert ctl.decisions == []           # fallback decisions are the paper's
+
+
+def test_choose_width_prices_overhead_against_unpruned_work():
+    """On a growing candidate trajectory: high per-job overhead → fuse;
+    negligible overhead → width 1 (the un-pruned extra candidates are all
+    cost, no saving)."""
+    prev, prev2 = S(1545, 40, 0.009), S(383, 12, 0.003)    # growth ≈ 4×
+    fuse = _calibrate_counts(_fresh_controller(max_width=8), a=0.05, b=1e-12)
+    assert fuse.choose_width(prev, prev2) > 1.0
+    lean = _calibrate_counts(_fresh_controller(max_width=8), a=0.0, b=1e-6)
+    assert lean.choose_width(prev, prev2) == 1.0
+
+
+def test_choose_width_post_job1_uses_binomial_lattice():
+    """At the post-Job1 decision the un-pruned level 2+j is exactly
+    C(|L1|, 2+j); with |L1| large the binomial mid-levels dwarf any job
+    overhead, so the controller must refuse to fuse."""
+    ctl = _fresh_controller(max_width=8)
+    ctl.set_count_context(n_txns=1000, n_words=6, impl="default")
+    _calibrate_counts(ctl, a=0.005, b=3e-10)
+    assert ctl.choose_width(S(192, 60, 0.008), None) == 1.0
+    d = ctl.decisions[-1]
+    assert d.site == "pass_width" and d.chosen == 1
+    # predicted cost is strictly increasing in fused width on this lattice
+    costs = [d.predicted[w] for w in sorted(d.predicted)]
+    assert all(c2 > c1 for c1, c2 in zip(costs, costs[1:]))
+
+
+def test_choose_width_alpha_covers_chosen_levels():
+    """The returned α is a *budget*: with the drivers' overshoot-by-one-level
+    semantics, α·|L| must fall between the cumulative candidate estimates of
+    the chosen width and its neighbours."""
+    ctl = _calibrate_counts(_fresh_controller(max_width=8), a=0.05, b=1e-12)
+    prev, prev2 = S(1545, 40, 0.009), S(383, 12, 0.003)
+    alpha = ctl.choose_width(prev, prev2)
+    w = ctl.decisions[-1].chosen
+    growth = max(min(prev.n_candidates / prev2.n_candidates, 16.0), 0.25)
+    est = [prev.n_candidates * growth ** (j + 1) for j in range(w)]
+    assert sum(est[:w - 1]) <= alpha * prev.n_frequent_last <= sum(est)
+
+
+def test_observe_count_backfills_decision_telemetry():
+    ctl = _calibrate_counts(_fresh_controller(max_width=4), a=0.05, b=1e-12)
+    ctl.choose_width(S(1545, 40, 0.009), S(383, 12, 0.003))
+    assert ctl.decisions[-1].measured is None
+    ctl.observe_count(500, 0.042)
+    assert ctl.decisions[-1].measured == pytest.approx(0.042)
+    rows = ctl.decision_rows()
+    assert rows[-1]["site"] == "pass_width"
+    assert str(rows[-1]["chosen"]) in rows[-1]["predicted"]
+
+
+# ---------------------------------------------------------------------------
+# CostController: remine + speculation + fusion primitives
+# ---------------------------------------------------------------------------
+
+def test_predict_remine_extrapolates_from_one_sample():
+    """The cold-start fix: one tiny init-time mine already scales with the
+    window instead of freezing the estimate."""
+    ctl = _fresh_controller()
+    ctl.observe_remine(100, 0.01)
+    assert ctl.predict_remine(100) == pytest.approx(0.01)
+    assert ctl.predict_remine(1000) == pytest.approx(0.10)
+
+
+def test_should_remine_threshold_and_telemetry():
+    ctl = _fresh_controller()
+    ctl.observe_remine(100, 0.01)
+    common = dict(window_rows=1000, staleness_factor=1.0)   # predicted 0.1 s
+    assert not ctl.should_remine(drift=0.5, staleness_seconds=0.1, **common)
+    assert ctl.should_remine(drift=0.5, staleness_seconds=0.3, **common)
+    assert ctl.decisions[-1].site == "remine"
+    # uncalibrated + no fallback: never fires
+    cold = _fresh_controller()
+    assert not cold.should_remine(drift=9.0, staleness_seconds=9.0, **common)
+    assert cold.should_remine(drift=9.0, staleness_seconds=9.0,
+                              fallback_seconds=0.1, **common)
+
+
+def test_should_speculate_gates_on_predicted_window():
+    ctl = _calibrate_counts(_fresh_controller(), a=0.0, b=1e-6)
+    assert ctl.should_speculate(10**6)       # no join cost yet: permissive
+    ctl.observe_spec(1.0)
+    assert ctl.should_speculate(10**6)       # 1 s count vs 0.25 s threshold
+    assert not ctl.should_speculate(10**4)   # 0.01 s count: no window
+    assert ctl.decisions[-1].site == "speculate"
+
+
+def test_choose_fusion_uncalibrated_then_budgeted():
+    ctl = _fresh_controller()
+    assert ctl.choose_fusion(work_per_unit=1e3, queued=8, max_fuse=16) is None
+    for f in (1, 2, 4, 8):                   # exact affine dispatch timings
+        ctl.observe_serve(1e3, f, 0.01 + 1e-6 * 1e3 * f)
+    # no budget: fuse everything that is queued (bounded by max_fuse)
+    assert ctl.choose_fusion(work_per_unit=1e3, queued=8, max_fuse=16) == 8
+    assert ctl.choose_fusion(work_per_unit=1e3, queued=8, max_fuse=4) == 4
+    # budget 12.5 ms fits a + b·1e3·f for f ≤ 2
+    got = ctl.choose_fusion(work_per_unit=1e3, queued=8, max_fuse=16,
+                            latency_budget_s=0.0125)
+    assert got == 2
+    # a budget nothing meets degrades to per-unit dispatch
+    assert ctl.choose_fusion(work_per_unit=1e3, queued=8, max_fuse=16,
+                             latency_budget_s=1e-9) == 1
+    assert ctl.decisions[-1].site == "rule_serve_fusion"
+
+
+def test_decision_ring_is_capped():
+    from repro.costmodel.controller import MAX_DECISIONS, Decision
+    ctl = _fresh_controller()
+    for i in range(MAX_DECISIONS + 10):
+        ctl._record(Decision("pass_width", "k", {}, i))
+    assert len(ctl.decisions) == MAX_DECISIONS
+    assert ctl.decisions[-1].chosen == MAX_DECISIONS + 9
+
+
+# ---------------------------------------------------------------------------
+# Integration: StreamMiner growing-window prediction + autotune key migration
+# ---------------------------------------------------------------------------
+
+def _toy_txns(n, seed=0, n_items=12):
+    rng = np.random.default_rng(seed)
+    base = rng.random((3, n_items)) < 0.5
+    out = []
+    for _ in range(n):
+        pat = base[rng.integers(3)]
+        row = np.where(rng.random(n_items) < 0.85, pat,
+                       rng.random(n_items) < 0.1)
+        out.append(np.nonzero(row)[0].tolist() or [0])
+    return out
+
+
+def test_stream_remine_prediction_grows_with_window():
+    """Regression for the cold-start freeze: after one small-window re-mine
+    the predicted cost must keep scaling with the *current* window size."""
+    from repro.stream import StreamMiner
+    m = StreamMiner(12, 0.3, capacity=128, staleness_factor=1e9,
+                    refresh_rules=False, autotune=False,
+                    controller=_fresh_controller())
+    m.push(_toy_txns(16, seed=3))
+    assert m.n_remines >= 1
+    p_small = m._predicted_remine_seconds()
+    assert p_small == pytest.approx(
+        m.controller.predict_remine(m.window.size))
+    assert m.controller.predict_remine(8 * m.window.size) > p_small
+
+
+def test_autotune_legacy_key_migrated_without_resweep(tmp_path, monkeypatch):
+    import repro.kernels.autotune as at
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    monkeypatch.setattr(at, "_memory_cache", {})
+
+    def boom(*a, **kw):
+        raise AssertionError("migration must not re-sweep")
+    monkeypatch.setattr(at, "time_once", boom)
+
+    shape = "vertical/C512/T256/W1/k2"
+    legacy_cfg = {"block": 512}
+    (tmp_path / "at.json").write_text(json.dumps({f"cpu/{shape}": legacy_cfg}))
+    got = at.tuned_blocks("vertical", C=300, T=200, W=1, kmax=2)
+    assert got == legacy_cfg
+    disk = json.load(open(tmp_path / "at.json"))
+    assert disk == {f"{device_key()}/{shape}": legacy_cfg}

@@ -73,16 +73,31 @@ def test_readme_exists_and_commands_resolve():
 def test_readme_mentions_tracked_benchmarks():
     text = (ROOT / "README.md").read_text()
     for record in ("BENCH_exec_time.json", "BENCH_kernels.json",
-                   "BENCH_rules.json", "BENCH_stream.json"):
+                   "BENCH_rules.json", "BENCH_stream.json",
+                   "BENCH_costmodel.json"):
         assert record in text, f"README should cite {record} headline numbers"
         assert (ROOT / record).exists(), f"{record} missing from repo root"
 
 
 @pytest.mark.parametrize("surface", [
     "repro.launch.mine", "repro.launch.serve_rules", "repro.launch.stream",
+    "repro.launch.report",
     "examples/quickstart.py", "examples/recommend.py",
     "examples/stream_mine.py",
 ])
 def test_quickstart_surfaces_in_readme(surface):
     """The documented entry points stay documented."""
     assert surface in (ROOT / "README.md").read_text()
+
+
+def test_measured_policy_documented():
+    """The cost-model subsystem's public surfaces stay documented: the
+    `measured` algorithm row in the README table and the §9 architecture
+    section it cites."""
+    readme = (ROOT / "README.md").read_text()
+    assert "`measured`" in readme and "BENCH_costmodel.json" in readme
+    assert 9 in _design_sections()
+    design = (ROOT / "DESIGN.md").read_text()
+    for primitive in ("choose_width", "should_remine", "choose_fusion",
+                      "should_speculate"):
+        assert primitive in design, f"DESIGN.md §9 must document {primitive}"
