@@ -32,12 +32,12 @@ class _EvalController(CostController):
         super().__init__(model)
         self.rows = []
 
-    def observe_count(self, n_candidates, seconds):
-        p = self.predict_count(n_candidates)
+    def observe_count(self, n_candidates, seconds, bytes_to_host=None):
+        p = self.predict_count(n_candidates, bytes_to_host)
         if p is not None and seconds > 0:
             self.rows.append(dict(n_candidates=int(n_candidates),
                                   **predicted_vs_achieved(p, seconds)))
-        super().observe_count(n_candidates, seconds)
+        super().observe_count(n_candidates, seconds, bytes_to_host)
 
 
 def _predictor_arm(fast: bool):

@@ -229,6 +229,36 @@ def jpopcount_rows(masks: jax.Array) -> jax.Array:
     return jax.lax.population_count(masks.astype(jnp.uint32)).astype(jnp.int32).sum(axis=-1)
 
 
+def junpack_bits(masks: jax.Array) -> jax.Array:
+    """Bit-plane unpack on device: ``(..., W) uint32 → (..., W*32) int8``.
+
+    Column ``w*32 + b`` of the output is bit ``b`` of word ``w`` — the same
+    little bit-order every packed layout in this repo uses, so
+    ``junpack_bits(pack_itemsets(s, n))[:, i]`` is the indicator of item ``i``
+    (columns ≥ ``n_items`` are zero).  This is the shared unpack behind the
+    matmul counting forms (DESIGN.md §10): containment becomes
+    ``count(c, t) = Σ_b c_bits[b]·t_bits[b] == popcount(c)`` and the sum is an
+    int8 ``dot_general`` the MXU/tensor cores execute natively.
+    """
+    m = masks.astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (m[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*m.shape[:-1], m.shape[-1] * WORD_BITS).astype(jnp.int8)
+
+
+def jpack_bits(bits: jax.Array) -> jax.Array:
+    """Inverse of :func:`junpack_bits`: ``(..., B) int8/bool → (..., ceil(B/32))
+    uint32`` (B is zero-padded up to the word multiple)."""
+    B = bits.shape[-1]
+    pad = (-B) % WORD_BITS
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], pad), bits.dtype)], axis=-1)
+    words = bits.reshape(*bits.shape[:-1], -1, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (words << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
 def jsubset_matrix(cands: jax.Array, txns: jax.Array) -> jax.Array:
     """(C, W) x (T, W) → (C, T) bool: candidate ⊆ transaction."""
     c = cands[:, None, :]

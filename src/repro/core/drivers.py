@@ -201,6 +201,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
     # -- Job1: frequent 1-itemsets (OneItemsetMapper/Combiner/Reducer) --------
     if k_prev is None:
         t0 = time.perf_counter()
+        bytes0 = runtime.stats.bytes_to_host
         singles = singleton_masks(n_items)
         if pipeline:
             keep, counts = runtime.phase_count_filtered(
@@ -215,7 +216,9 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         phases.append(PhaseResult(1, 1, [n_items], 0.0, el, el,
                                   [int(keep.sum())], {1: levels[1]}, True))
         history.append((n_items, int(keep.sum()), el))
-        controller.observe_count(n_items, el)
+        controller.observe_count(
+            n_items, el,
+            bytes_to_host=runtime.stats.bytes_to_host - bytes0)
         k_prev = 1
         if checkpoint_dir:
             _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
@@ -246,6 +249,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         if count_hook is not None:
             count_hook("phase_start", k_prev)
         gen_method = "prefix" if pipeline else "pairwise"
+        bytes0 = runtime.stats.bytes_to_host
         res = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
                         min_count, optimized=optimized, fused=pipeline,
                         speculate=do_spec, spec=pending_spec,
@@ -273,7 +277,8 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         # and host-sync overhead too, or fusion looks worthless to the model
         controller.observe_count(
             sum(res.candidate_counts),
-            max(res.elapsed_seconds - res.spec_seconds, 0.0))
+            max(res.elapsed_seconds - res.spec_seconds, 0.0),
+            bytes_to_host=runtime.stats.bytes_to_host - bytes0)
         controller.observe_spec(res.spec_seconds)
         phases.append(res)
         levels.update(res.levels)

@@ -41,8 +41,11 @@ from repro.kernels.autotune import tuned_blocks
 from .counting import local_counts, local_counts_vertical
 from .bitset import popcount_rows
 
-IMPLS = ("jnp", "pallas", "pallas_interpret",
-         "vertical", "vertical_pallas", "vertical_pallas_interpret")
+IMPLS = ("jnp", "matmul", "pallas", "pallas_interpret",
+         "matmul_pallas", "matmul_pallas_interpret",
+         "vertical", "vertical_matmul",
+         "vertical_pallas", "vertical_pallas_interpret",
+         "vertical_matmul_pallas", "vertical_matmul_pallas_interpret")
 
 
 @dataclasses.dataclass
@@ -134,10 +137,12 @@ class MapReduceRuntime:
       mesh: a Mesh containing a ``data`` axis (other axes are unused here but
         allowed, so the production (data, model) mesh can be passed directly).
         Defaults to a 1-D mesh over all local devices.
-      impl: counting implementation — "jnp", "pallas", "pallas_interpret",
-        "vertical" (jnp gather-scan), "vertical_pallas",
-        "vertical_pallas_interpret".  Default: "pallas" on TPU, "vertical"
-        elsewhere.
+      impl: counting implementation — any of ``IMPLS`` (popcount families
+        "jnp"/"pallas"/"vertical*" plus their bit-plane "matmul" twins,
+        DESIGN.md §10), or None/"auto": the cross-family autotune plan
+        winner for the database's shape bucket, resolved at
+        :meth:`scatter_db` time (static fallback when autotune is off or
+        the plan is unavailable: "pallas" on TPU, "vertical" elsewhere).
       cand_axis: optional mesh axis name to additionally shard *candidates*
         over (2-D decomposition; beyond-paper, see DESIGN.md). None replicates
         candidates, matching the paper (every mapper holds the full trie).
@@ -149,9 +154,11 @@ class MapReduceRuntime:
                  cand_axis: str | None = None, autotune: bool = True):
         if mesh is None:
             mesh = make_mesh((len(jax.devices()),), ("data",))
-        if impl is None:
-            # TPU: dense horizontal Pallas kernel; CPU: vertical layout
-            # (§Perf iteration M-D — gather-heavy but 10-70× less word work)
+        self._auto_impl = impl is None or impl == "auto"
+        if self._auto_impl:
+            # static fallback until scatter_db sees the data shape and can
+            # consult the cross-family plan — TPU: dense horizontal Pallas
+            # kernel; CPU: vertical layout (§Perf iteration M-D)
             impl = "pallas" if jax.default_backend() == "tpu" else "vertical"
         if impl not in IMPLS:
             raise ValueError(f"unknown impl {impl!r}; options: {IMPLS}")
@@ -182,6 +189,16 @@ class MapReduceRuntime:
         once — the InputFormat step of the job)."""
         from .bitset import vertical_pack
         n, w = db_masks.shape
+        if self._auto_impl and self.autotune and n_items is not None:
+            # cross-family plan winner at a representative per-phase shape
+            # (the cross-check that fixes tuned-but-slower static defaults,
+            # DESIGN.md §10); counts are bit-exact across impls, so the
+            # mining result is identical whichever family wins
+            from repro.kernels.autotune import tuned_plan
+            rep_c = min(max(16 * n_items, 256), 4096)
+            plan = tuned_plan("count", C=rep_c, T=n, W=w, kmax=4)
+            if plan is not None and plan["impl"] in IMPLS:
+                self.impl = plan["impl"]
         d = self.n_data_shards
         pad = (-n) % d
         if pad:

@@ -107,13 +107,29 @@ class CostController:
     def count_key(self) -> str:
         return f"{self.device}/{self._count_impl}/count"
 
-    def _count_ops(self, n_candidates: float) -> float:
-        return count_job_ops(max(int(n_candidates), 1), self._count_txns,
-                             self._count_words)
+    @staticmethod
+    def est_count_bytes(n_candidates: float) -> float:
+        """Estimated device→host result bytes of one fused counting job:
+        the packed keep mask (C/8 bytes) plus filtered int32 counts (4·C).
+        Used when the caller has no measured transfer delta (predictions)."""
+        return 4.125 * max(float(n_candidates), 1.0)
 
-    def observe_count(self, n_candidates: int, seconds: float) -> None:
-        """Calibrate from one completed counting job (any policy, any run)."""
-        self.model.observe(self.count_key, self._count_ops(n_candidates),
+    def _count_ops(self, n_candidates: float,
+                   bytes_to_host: float | None = None) -> float:
+        if bytes_to_host is None:
+            bytes_to_host = self.est_count_bytes(n_candidates)
+        return count_job_ops(max(int(n_candidates), 1), self._count_txns,
+                             self._count_words, bytes_to_host=bytes_to_host)
+
+    def observe_count(self, n_candidates: int, seconds: float,
+                      bytes_to_host: float | None = None) -> None:
+        """Calibrate from one completed counting job (any policy, any run).
+
+        ``bytes_to_host`` is the job's measured device→host result traffic
+        (e.g. a ``RuntimeStats.bytes_to_host`` delta); omitted, the fused-job
+        estimate keeps observation and prediction in the same basis."""
+        self.model.observe(self.count_key,
+                           self._count_ops(n_candidates, bytes_to_host),
                            seconds)
         # realized time goes to the newest unmeasured width decision
         for d in reversed(self.decisions):
@@ -122,9 +138,11 @@ class CostController:
                     d.measured = float(seconds)
                 break
 
-    def predict_count(self, n_candidates: int) -> float | None:
+    def predict_count(self, n_candidates: int,
+                      bytes_to_host: float | None = None) -> float | None:
         return self.model.predict(self.count_key,
-                                  self._count_ops(n_candidates))
+                                  self._count_ops(n_candidates,
+                                                  bytes_to_host))
 
     def choose_width(self, prev, prev2) -> float | None:
         """Pick the candidate budget α minimizing predicted cost per level.

@@ -1,13 +1,28 @@
-"""Pallas TPU kernels for the counting hot-spot (+ jnp oracles and wrappers)."""
+"""Pallas TPU kernels for the counting hot-spot (+ jnp oracles and wrappers).
 
-from .autotune import tuned_blocks
-from .delta_count import delta_count, delta_count_jnp, delta_count_pallas
+Every kernel comes in two formulations (DESIGN.md §10): the popcount-AND
+subset test and the bit-plane int8 ``dot_general`` ("matmul") twin, each with
+a blocked-jnp oracle and a Pallas variant.  ``autotune.tuned_plan`` picks the
+fastest family per (backend, shape bucket).
+"""
+
+from .autotune import tuned_blocks, tuned_plan
+from .delta_count import (delta_count, delta_count_jnp, delta_count_matmul,
+                          delta_count_matmul_pallas, delta_count_pallas)
 from .ops import support_count
 from .ref import support_count_ref
-from .rule_match import rule_scores_jnp, rule_scores_pallas
-from .vertical_count import vertical_count_jnp, vertical_count_pallas
+from .rule_match import (rule_scores_jnp, rule_scores_matmul,
+                         rule_scores_matmul_pallas, rule_scores_pallas)
+from .support_count import support_count_matmul, support_count_matmul_pallas
+from .vertical_count import (vertical_count_jnp, vertical_count_matmul,
+                             vertical_count_matmul_pallas,
+                             vertical_count_pallas)
 
-__all__ = ["support_count", "support_count_ref", "tuned_blocks",
+__all__ = ["support_count", "support_count_ref", "tuned_blocks", "tuned_plan",
+           "support_count_matmul", "support_count_matmul_pallas",
            "delta_count", "delta_count_jnp", "delta_count_pallas",
+           "delta_count_matmul", "delta_count_matmul_pallas",
            "rule_scores_jnp", "rule_scores_pallas",
-           "vertical_count_jnp", "vertical_count_pallas"]
+           "rule_scores_matmul", "rule_scores_matmul_pallas",
+           "vertical_count_jnp", "vertical_count_pallas",
+           "vertical_count_matmul", "vertical_count_matmul_pallas"]

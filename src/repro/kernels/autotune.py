@@ -43,37 +43,97 @@ from repro.costmodel.measure import device_key, time_once
 
 DEFAULTS = {
     "jnp": {"txn_block": 4096},
+    "matmul": {"txn_block": 2048},
     "pallas": {"bc": 256, "bt": 512},
     "pallas_interpret": {"bc": 256, "bt": 512},
+    "matmul_pallas": {"bc": 256, "bt": 512},
+    "matmul_pallas_interpret": {"bc": 256, "bt": 512},
     "vertical": {"block": 2048},
+    "vertical_matmul": {"block": 2048},
     "vertical_pallas": {"bt": 512},
     "vertical_pallas_interpret": {"bt": 512},
+    "vertical_matmul_pallas": {"bc": 256, "bt": 512},
+    "vertical_matmul_pallas_interpret": {"bc": 256, "bt": 512},
     "rules_jnp": {"q_block": 1024},
+    "rules_matmul": {"q_block": 1024},
     "rules_pallas": {"bq": 256, "br": 512},
     "rules_pallas_interpret": {"bq": 256, "br": 512},
+    "rules_matmul_pallas": {"bq": 256, "br": 512},
+    "rules_matmul_pallas_interpret": {"bq": 256, "br": 512},
     "delta_jnp": {"txn_block": 1024},
+    "delta_matmul": {"txn_block": 1024},
     "delta_pallas": {"bc": 256, "bt": 256},
     "delta_pallas_interpret": {"bc": 256, "bt": 256},
+    "delta_matmul_pallas": {"bc": 256, "bt": 256},
+    "delta_matmul_pallas_interpret": {"bc": 256, "bt": 256},
 }
 
 CONFIGS = {
     "jnp": [{"txn_block": b} for b in (1024, 4096, 16384)],
+    "matmul": [{"txn_block": b} for b in (512, 2048, 8192)],
     "pallas": [{"bc": bc, "bt": bt}
                for bc, bt in ((128, 512), (256, 512), (256, 1024))],
+    "matmul_pallas": [{"bc": bc, "bt": bt}
+                      for bc, bt in ((128, 512), (256, 512), (256, 1024))],
     "vertical": [{"block": b} for b in (512, 2048, 8192)],
+    "vertical_matmul": [{"block": b} for b in (512, 2048, 8192)],
     "vertical_pallas": [{"bt": b} for b in (512, 1024, 2048)],
+    "vertical_matmul_pallas": [{"bc": bc, "bt": bt}
+                               for bc, bt in ((128, 512), (256, 512),
+                                              (256, 1024))],
     "rules_jnp": [{"q_block": b} for b in (256, 1024, 4096)],
+    "rules_matmul": [{"q_block": b} for b in (256, 1024, 4096)],
     "rules_pallas": [{"bq": bq, "br": br}
                      for bq, br in ((128, 512), (256, 512), (256, 1024))],
+    "rules_matmul_pallas": [{"bq": bq, "br": br}
+                            for bq, br in ((128, 512), (256, 512),
+                                           (256, 1024))],
     "delta_jnp": [{"txn_block": b} for b in (256, 1024, 4096)],
+    "delta_matmul": [{"txn_block": b} for b in (256, 1024, 4096)],
     "delta_pallas": [{"bc": bc, "bt": bt}
                      for bc, bt in ((128, 256), (256, 256), (256, 512))],
+    "delta_matmul_pallas": [{"bc": bc, "bt": bt}
+                            for bc, bt in ((128, 256), (256, 256),
+                                           (256, 512))],
 }
+
+# -- cross-family plans (DESIGN.md §10) ---------------------------------------
+#
+# ``tuned_plan`` searches *across* implementation families (popcount vs
+# matmul, horizontal vs vertical, jnp vs Pallas) at one shape bucket and
+# persists the overall winner — the per-family ``tuned_blocks`` sweep only
+# picks block sizes *within* a family, which is how the BENCH own-goal of a
+# tuned-but-43×-slower vertical config at C=256 happened.  The jnp baseline
+# family is always timed, so the recorded winner can never lose to it.
+
+PLAN_FAMILIES = {
+    "count": ("jnp", "matmul", "vertical", "vertical_matmul",
+              "pallas", "matmul_pallas", "vertical_pallas",
+              "vertical_matmul_pallas"),
+    "delta": ("delta_jnp", "delta_matmul", "delta_pallas",
+              "delta_matmul_pallas"),
+    "rules": ("rules_jnp", "rules_matmul", "rules_pallas",
+              "rules_matmul_pallas"),
+}
+PLAN_BASELINES = {"count": "jnp", "delta": "delta_jnp", "rules": "rules_jnp"}
+
+# skip (never the baseline / predicted winner) families the calibrated cost
+# model prices more than this factor above the predicted best — pure pruning
+# of the timing sweep, not a substitute for measuring the finalists
+PLAN_PRICE_SKIP = 8.0
 
 # caps on the synthetic timing shapes: tuning must stay ≪ one counting job
 _CAP_C = 4096
 _CAP_T_ROWS = 8192     # horizontal: transaction rows
 _CAP_T_WORDS = 2048    # vertical: transaction words (= 64k transactions)
+
+# Cross-family plan sweeps time ONE config per family and persist the winner
+# forever, so they can afford (nearly) true candidate extents.  Capped-shape
+# timings mislead there: families scale differently past the cap (the
+# vertical gather-scan is strongly sublinear in C while the horizontal path
+# turns superlinear once the txn tile falls out of cache), so a C=16384 plan
+# timed at C=4096 picks the wrong layout.
+_PLAN_CAP_C = 16384
 
 _memory_cache: dict = {}
 
@@ -115,11 +175,12 @@ def _bucket(n: int) -> int:
 _time_once = time_once
 
 
-def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
+def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int,
+                      cap_c: int = _CAP_C):
     """Build per-config callables over synthetic data of the bucketed shape."""
     rng = np.random.default_rng(0)
-    if impl in ("jnp", "pallas"):
-        C = min(C, _CAP_C)
+    if impl in ("jnp", "matmul", "pallas", "matmul_pallas"):
+        C = min(C, cap_c)
         T = min(T, _CAP_T_ROWS)
         cands = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
         txns = jnp.asarray(rng.integers(0, 2**32, (T, W), dtype=np.uint32))
@@ -129,8 +190,17 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
             def make(cfg):
                 blk = min(cfg["txn_block"], T)
                 return lambda: _support_count_jnp(cands, txns, block=blk)
+        elif impl == "matmul":
+            from .support_count import support_count_matmul
+
+            def make(cfg):
+                blk = min(cfg["txn_block"], T)
+                return lambda: support_count_matmul(cands, txns, block=blk)
         else:
-            from .support_count import support_count_pallas
+            from .support_count import (support_count_matmul_pallas,
+                                        support_count_pallas)
+            fn = (support_count_matmul_pallas if impl == "matmul_pallas"
+                  else support_count_pallas)
 
             def make(cfg):
                 bc = min(cfg["bc"], C)
@@ -138,10 +208,11 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
                 tp = T + ((-T) % bt)
                 tx = jnp.concatenate(
                     [txns, jnp.zeros((tp - T, W), txns.dtype)], axis=0)
-                return lambda: support_count_pallas(cands, tx, bc=bc, bt=bt)
+                return lambda: fn(cands, tx, bc=bc, bt=bt)
         return make
-    if impl in ("vertical", "vertical_pallas"):
-        C = min(C, _CAP_C)
+    if impl in ("vertical", "vertical_matmul", "vertical_pallas",
+                "vertical_matmul_pallas"):
+        C = min(C, cap_c)
         Tw = min(T, _CAP_T_WORDS)
         n_items = max(W * 32 - 1, 1)
         vdb = rng.integers(0, 2**32, (n_items + 1, Tw), dtype=np.uint32)
@@ -151,31 +222,47 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
         for j in range(kmax):
             idx[:, j] = rng.integers(0, n_items, C)
         idx = jnp.asarray(idx)
-        if impl == "vertical":
-            from .vertical_count import vertical_count_jnp
+        if impl in ("vertical", "vertical_matmul"):
+            from .vertical_count import (vertical_count_jnp,
+                                         vertical_count_matmul)
+            fn = (vertical_count_matmul if impl == "vertical_matmul"
+                  else vertical_count_jnp)
 
             def make(cfg):
-                return lambda: vertical_count_jnp(vdb, idx, block=cfg["block"])
-        else:
+                return lambda: fn(vdb, idx, block=cfg["block"])
+        elif impl == "vertical_pallas":
             from .vertical_count import vertical_count_pallas
 
             def make(cfg):
                 return lambda: vertical_count_pallas(vdb, idx, bt=cfg["bt"])
+        else:
+            from .vertical_count import vertical_count_matmul_pallas
+
+            def make(cfg):
+                bc = min(cfg["bc"], C)
+                return lambda: vertical_count_matmul_pallas(
+                    vdb, idx, bc=bc, bt=cfg["bt"])
         return make
-    if impl in ("delta_jnp", "delta_pallas"):
-        C = min(C, _CAP_C)
+    if impl in ("delta_jnp", "delta_matmul", "delta_pallas",
+                "delta_matmul_pallas"):
+        C = min(C, cap_c)
         T = min(T, _CAP_T_ROWS)       # slab rows (added + evicted)
         cands = jnp.asarray(rng.integers(0, 2**32, (C, W), dtype=np.uint32))
         txns = jnp.asarray(rng.integers(0, 2**32, (T, W), dtype=np.uint32))
         signs = jnp.asarray(rng.choice(np.array([-1, 1], np.int32), T))
-        if impl == "delta_jnp":
-            from .delta_count import delta_count_jnp
+        if impl in ("delta_jnp", "delta_matmul"):
+            from .delta_count import delta_count_jnp, delta_count_matmul
+            fn = (delta_count_matmul if impl == "delta_matmul"
+                  else delta_count_jnp)
 
             def make(cfg):
                 blk = min(cfg["txn_block"], T)
-                return lambda: delta_count_jnp(cands, txns, signs, block=blk)
+                return lambda: fn(cands, txns, signs, block=blk)
         else:
-            from .delta_count import delta_count_pallas
+            from .delta_count import (delta_count_matmul_pallas,
+                                      delta_count_pallas)
+            fn = (delta_count_matmul_pallas if impl == "delta_matmul_pallas"
+                  else delta_count_pallas)
 
             def make(cfg):
                 bc = min(cfg["bc"], C)
@@ -185,29 +272,34 @@ def _candidate_runner(impl: str, C: int, T: int, W: int, kmax: int):
                     [txns, jnp.zeros((tp - T, W), txns.dtype)], axis=0)
                 sg = jnp.concatenate(
                     [signs, jnp.zeros((tp - T,), signs.dtype)])
-                return lambda: delta_count_pallas(cands, tx, sg, bc=bc, bt=bt)
+                return lambda: fn(cands, tx, sg, bc=bc, bt=bt)
         return make
-    if impl in ("rules_jnp", "rules_pallas"):
-        R = min(C, _CAP_C)             # rules play the candidate role
+    if impl in ("rules_jnp", "rules_matmul", "rules_pallas",
+                "rules_matmul_pallas"):
+        R = min(C, cap_c)             # rules play the candidate role
         Q = min(T, _CAP_T_ROWS)        # baskets play the transaction role
         antes = rng.integers(0, 2**32, (R, W), dtype=np.uint32)
         cons = rng.integers(0, 2**32, (R, W), dtype=np.uint32) & ~antes
         scores = jnp.asarray(rng.random(R, dtype=np.float32))
         antes, cons = jnp.asarray(antes), jnp.asarray(cons)
         baskets = jnp.asarray(rng.integers(0, 2**32, (Q, W), dtype=np.uint32))
-        if impl == "rules_jnp":
-            from .rule_match import rule_scores_jnp
+        if impl in ("rules_jnp", "rules_matmul"):
+            from .rule_match import rule_scores_jnp, rule_scores_matmul
+            fn = (rule_scores_matmul if impl == "rules_matmul"
+                  else rule_scores_jnp)
 
             def make(cfg):
                 qb = min(cfg["q_block"], Q)
-                return lambda: rule_scores_jnp(antes, cons, scores, baskets,
-                                               q_block=qb)
+                return lambda: fn(antes, cons, scores, baskets, q_block=qb)
         else:
-            from .rule_match import rule_scores_pallas
+            from .rule_match import (rule_scores_matmul_pallas,
+                                     rule_scores_pallas)
+            fn = (rule_scores_matmul_pallas if impl == "rules_matmul_pallas"
+                  else rule_scores_pallas)
 
             def make(cfg):
-                return lambda: rule_scores_pallas(antes, cons, scores, baskets,
-                                                  bq=cfg["bq"], br=cfg["br"])
+                return lambda: fn(antes, cons, scores, baskets,
+                                  bq=cfg["bq"], br=cfg["br"])
         return make
     raise ValueError(f"unknown impl {impl!r}")
 
@@ -217,8 +309,9 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     """Best block config for a counting job of the given shape bucket.
 
     Args:
-      impl: "jnp" | "pallas" | "pallas_interpret" | "vertical" |
-            "vertical_pallas" | "vertical_pallas_interpret".
+      impl: any key of ``CONFIGS`` — the popcount families ("jnp", "pallas",
+            "vertical", "rules_*", "delta_*") and their bit-plane "matmul"
+            twins ("matmul", "matmul_pallas", "vertical_matmul", ...).
       C:    padded candidate rows.
       T:    transaction rows (horizontal impls) or words (vertical impls).
       W:    words per bitmask (horizontal) / of the item axis (vertical).
@@ -230,9 +323,7 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     untunable = (
         impl not in CONFIGS
         or impl.endswith("interpret")
-        or (impl in ("pallas", "vertical_pallas", "rules_pallas",
-                     "delta_pallas")
-            and backend != "tpu")
+        or ("pallas" in impl and backend != "tpu")
         or os.environ.get("REPRO_AUTOTUNE", "1") == "0"
     )
     if untunable:
@@ -268,3 +359,112 @@ def tuned_blocks(impl: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
     disk[key] = dict(best_cfg)
     _save_disk(disk)
     return dict(best_cfg)
+
+
+def _family_shape(kind: str, family: str, C: int, T: int):
+    """Per-family (C, T) timing shape: vertical families take transaction
+    *words*, everything else rows; rules' T axis is query baskets."""
+    if kind == "count" and family.startswith("vertical"):
+        return C, max((T + 31) // 32, 1)
+    return C, T
+
+
+def _strip_family(kind: str, family: str) -> str:
+    """Family key → the wrapper-level impl name callers dispatch on."""
+    for prefix in ("delta_", "rules_"):
+        if family.startswith(prefix):
+            return family[len(prefix):]
+    return family
+
+
+def tuned_plan(kind: str, *, C: int, T: int, W: int = 1, kmax: int = 1,
+               backend: str | None = None) -> dict | None:
+    """Cross-family winner for one shape bucket (DESIGN.md §10).
+
+    Args:
+      kind: "count" (mining support counts — horizontal *and* vertical
+            families compete), "delta" (streaming slabs), "rules" (serving).
+      C:    candidate/rule rows.
+      T:    transaction/basket *rows* (vertical families are timed at the
+            equivalent word count internally).
+      W:    words per bitmask.
+      kmax: items per candidate (prices the vertical gather width).
+
+    Returns ``{"impl": <wrapper impl name>, "blocks": {...}}`` — the measured
+    argmin over every eligible family at its own tuned block sizes, with the
+    jnp baseline always timed (the cross-check that fixes tuned-but-slower
+    winners) — or None when ``REPRO_AUTOTUNE=0`` (callers fall back to their
+    static per-backend default).  Winners are cached in-process and on disk
+    under ``{device}/plan/...`` keys.  A calibrated cost model prunes
+    families priced ≥ ``PLAN_PRICE_SKIP``× the predicted best from the sweep
+    (never the baseline or the predicted winner).
+    """
+    if os.environ.get("REPRO_AUTOTUNE", "1") == "0":
+        return None
+    if kind not in PLAN_FAMILIES:
+        raise ValueError(f"unknown plan kind {kind!r}; "
+                         f"options: {tuple(PLAN_FAMILIES)}")
+    backend = backend or jax.default_backend()
+    families = [f for f in PLAN_FAMILIES[kind]
+                if not ("pallas" in f and backend != "tpu")]
+    baseline = PLAN_BASELINES[kind]
+    shape = f"plan/{kind}/C{_bucket(C)}/T{_bucket(T)}/W{W}/k{kmax}"
+    key = f"{device_key(backend)}/{shape}"
+    if key in _memory_cache:
+        return dict(_memory_cache[key])
+    disk = _load_disk()
+    if key in disk:
+        _memory_cache[key] = dict(disk[key])
+        return dict(disk[key])
+
+    # cost-model pruning: families the calibrated fits price far above the
+    # predicted best are skipped (timing still decides among the finalists)
+    predicted: dict[str, float] = {}
+    try:
+        from repro.roofline import count_job_ops
+        from repro.costmodel.model import default_model
+        mdl = default_model()
+        dev = device_key(backend)
+        for fam in families:
+            p = mdl.predict(f"{dev}/{_strip_family(kind, fam)}/count",
+                            count_job_ops(C, T, W))
+            if p is not None and p > 0:
+                predicted[fam] = p
+    except Exception:
+        predicted = {}
+    keep = set(families)
+    if len(predicted) >= 2:
+        pbest_fam = min(predicted, key=predicted.get)
+        pbest = predicted[pbest_fam]
+        keep = {f for f in families
+                if f == baseline or f == pbest_fam
+                or predicted.get(f, 0.0) < PLAN_PRICE_SKIP * pbest}
+
+    timed_us: dict[str, float] = {}
+    best_fam, best_blocks, best_t = None, None, float("inf")
+    for fam in families:
+        if fam not in keep:
+            continue
+        fc, ft = _family_shape(kind, fam, C, T)
+        blocks = tuned_blocks(fam, C=fc, T=ft, W=W, kmax=kmax,
+                              backend=backend)
+        try:
+            make = _candidate_runner(fam, _bucket(fc), _bucket(ft), W, kmax,
+                                     cap_c=_PLAN_CAP_C)
+            t = time_once(make(blocks))
+        except Exception:       # a family can be invalid for exotic shapes
+            continue
+        timed_us[fam] = t * 1e6
+        if t < best_t:
+            best_fam, best_blocks, best_t = fam, blocks, t
+    if best_fam is None:        # every family failed: fall back to baseline
+        fc, ft = _family_shape(kind, baseline, C, T)
+        best_fam = baseline
+        best_blocks = tuned_blocks(baseline, C=fc, T=ft, W=W, kmax=kmax,
+                                   backend=backend)
+    plan = {"impl": _strip_family(kind, best_fam), "family": best_fam,
+            "blocks": dict(best_blocks), "timed_us": timed_us}
+    _memory_cache[key] = dict(plan)
+    disk[key] = dict(plan)
+    _save_disk(disk)
+    return dict(plan)

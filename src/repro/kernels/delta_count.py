@@ -35,13 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.autotune import DEFAULTS, _bucket, tuned_blocks
+from repro.kernels.autotune import DEFAULTS, _bucket, tuned_blocks, tuned_plan
 
 DEFAULT_BC = 256
 DEFAULT_BT = 256
 DEFAULT_TXN_BLOCK = 1024
 
-DELTA_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+DELTA_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret", "matmul",
+               "matmul_pallas", "matmul_pallas_interpret")
 
 MIN_SLAB_BUCKET = 32       # pow2 slab padding floor — few compiled shapes
 
@@ -125,6 +126,98 @@ def delta_count_jnp(cands: jax.Array, txns: jax.Array, signs: jax.Array,
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Matmul (bit-plane int8 dot_general) formulation — DESIGN.md §10.
+#
+# Same identity as support_count's matmul form, with the per-row sign folded
+# into the reduction:  delta[i] = Σ_j sign[j] · [overlap[i,j] == width[i]].
+# Sign-0 padding keeps the form self-correcting (zero slab rows match empty
+# candidates but contribute 0), so like the popcount form no empty-candidate
+# correction is needed.
+# ---------------------------------------------------------------------------
+
+_DOT_LAST = (((1,), (1,)), ((), ()))      # contract the bit-plane axis of both
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def delta_count_matmul(cands: jax.Array, txns: jax.Array, signs: jax.Array,
+                       block: int = DEFAULT_TXN_BLOCK) -> jax.Array:
+    """Blocked-jnp matmul twin of :func:`delta_count_jnp` (bit-exact)."""
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    C, W = cands.shape
+    cands = cands.astype(jnp.uint32)
+    cb = junpack_bits(cands)                          # (C, B) int8
+    widths = jpopcount_rows(cands)                    # (C,) int32
+    pad = (-txns.shape[0]) % block
+    if pad:
+        txns = jnp.concatenate(
+            [txns, jnp.zeros((pad, W), txns.dtype)], axis=0)
+        signs = jnp.concatenate([signs, jnp.zeros((pad,), signs.dtype)])
+    chunks = txns.astype(jnp.uint32).reshape(-1, block, W)
+    sign_chunks = signs.astype(jnp.int32).reshape(-1, block)
+
+    def body(acc, xs):
+        chunk, sgn = xs
+        tb = junpack_bits(chunk)                      # (block, B) int8
+        ov = jax.lax.dot_general(cb, tb, _DOT_LAST,
+                                 preferred_element_type=jnp.int32)
+        signed = jnp.where(ov == widths[:, None], sgn[None, :], jnp.int32(0))
+        return acc + signed.sum(axis=1).astype(jnp.int32), None
+
+    init = jnp.zeros((C,), jnp.int32)
+    acc, _ = jax.lax.scan(body, init, (chunks, sign_chunks))
+    return acc
+
+
+def _delta_count_matmul_kernel(c_ref, w_ref, t_ref, s_ref, o_ref):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ov = jax.lax.dot_general(c_ref[...], t_ref[...], _DOT_LAST,
+                             preferred_element_type=jnp.int32)   # (BC, BT)
+    signed = jnp.where(ov == w_ref[...][:, None], s_ref[...][None, :],
+                       jnp.int32(0))
+    o_ref[...] += signed.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bt", "interpret"))
+def delta_count_matmul_pallas(cands: jax.Array, txns: jax.Array,
+                              signs: jax.Array, bc: int = DEFAULT_BC,
+                              bt: int = DEFAULT_BT,
+                              interpret: bool = False) -> jax.Array:
+    """Signed delta counts via the bit-plane matmul Pallas kernel (MXU form).
+
+    Same pre-padding contract as :func:`delta_count_pallas`.
+    """
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    C, W = cands.shape
+    T, Wt = txns.shape
+    assert W == Wt, (W, Wt)
+    assert C % bc == 0 and T % bt == 0, (C, bc, T, bt)
+    cands = cands.astype(jnp.uint32)
+    cb = junpack_bits(cands)
+    tb = junpack_bits(txns.astype(jnp.uint32))
+    widths = jpopcount_rows(cands)
+    B = cb.shape[1]
+    grid = (C // bc, T // bt)
+    return pl.pallas_call(
+        _delta_count_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, B), lambda ci, ti: (ci, 0)),
+            pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+            pl.BlockSpec((bt, B), lambda ci, ti: (ti, 0)),
+            pl.BlockSpec((bt,), lambda ci, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.int32),
+        interpret=interpret,
+    )(cb, widths, tb, signs.astype(jnp.int32))
+
+
 def build_slab(added: np.ndarray, evicted: np.ndarray,
                min_bucket: int = MIN_SLAB_BUCKET):
     """Concatenate add/evict slabs, pad rows to a pow2 bucket with sign 0.
@@ -157,8 +250,9 @@ def delta_count(cands, added, evicted, impl: str = "auto",
                compiled-shape set small across a stream).
       added:   (A, W) uint32 transactions entering the window.
       evicted: (E, W) uint32 transactions leaving the window.
-      impl:    "auto" | "jnp" | "pallas" | "pallas_interpret" ("auto": pallas
-               on TPU, jnp elsewhere; "pallas" off-TPU degrades to interpret).
+      impl:    one of ``DELTA_IMPLS`` ("auto": the autotuned cross-family
+               plan winner when autotune is on, else pallas on TPU / jnp
+               elsewhere; "*pallas" off-TPU degrades to interpret).
 
     Returns: (C,) int32 — add to the tracked int64 counts.
     """
@@ -172,18 +266,26 @@ def delta_count(cands, added, evicted, impl: str = "auto",
     if not signs.any():
         return np.zeros((C,), np.int32)
     backend = jax.default_backend()
-    if impl == "auto":
-        impl = "pallas" if backend == "tpu" else "jnp"
     T = slab.shape[0]
-    if impl == "jnp":
-        blocks = (tuned_blocks("delta_jnp", C=C, T=T, W=W) if autotune
-                  else dict(DEFAULTS["delta_jnp"]))
+    if impl == "auto":
+        plan = tuned_plan("delta", C=C, T=T, W=W) if autotune else None
+        if plan is not None:
+            impl = plan["impl"]
+        else:
+            impl = "pallas" if backend == "tpu" else "jnp"
+    if impl in ("jnp", "matmul"):
+        key = f"delta_{impl}"
+        blocks = (tuned_blocks(key, C=C, T=T, W=W) if autotune
+                  else dict(DEFAULTS[key]))
         block = min(blocks["txn_block"], T)
-        out = delta_count_jnp(jnp.asarray(cands), jnp.asarray(slab),
-                              jnp.asarray(signs), block=block)
+        fn = delta_count_jnp if impl == "jnp" else delta_count_matmul
+        out = fn(jnp.asarray(cands), jnp.asarray(slab),
+                 jnp.asarray(signs), block=block)
         return np.asarray(out)
-    interpret = impl == "pallas_interpret" or backend != "tpu"
-    impl_key = "delta_pallas_interpret" if interpret else "delta_pallas"
+    matmul = impl.startswith("matmul")
+    interpret = impl.endswith("_interpret") or backend != "tpu"
+    base = "delta_matmul_pallas" if matmul else "delta_pallas"
+    impl_key = f"{base}_interpret" if interpret else base
     blocks = (tuned_blocks(impl_key, C=C, T=T, W=W) if autotune
               else dict(DEFAULTS[impl_key]))
     bc = min(blocks["bc"], _bucket(C))
@@ -197,7 +299,7 @@ def delta_count(cands, added, evicted, impl: str = "auto",
         slab = np.concatenate(
             [slab, np.zeros((pad_t, W), np.uint32)], axis=0)
         signs = np.concatenate([signs, np.zeros(pad_t, np.int32)])
-    out = delta_count_pallas(jnp.asarray(cands), jnp.asarray(slab),
-                             jnp.asarray(signs), bc=bc, bt=bt,
-                             interpret=interpret)
+    fn = delta_count_matmul_pallas if matmul else delta_count_pallas
+    out = fn(jnp.asarray(cands), jnp.asarray(slab),
+             jnp.asarray(signs), bc=bc, bt=bt, interpret=interpret)
     return np.asarray(out)[:C]

@@ -4,7 +4,10 @@ memory-safe blocked-jnp fallback used on non-TPU backends.
 ``support_count(cands, txns, impl=...)``
   impl="pallas"  — the Pallas kernel (interpret=True automatically off-TPU).
   impl="jnp"     — blocked pure-jnp path (XLA-vectorized; default on CPU).
-  impl="auto"    — pallas on TPU else jnp.
+  impl="matmul"  — blocked bit-plane int8 dot_general form (DESIGN.md §10;
+                   the tensor-core-native formulation, default on GPU).
+  impl="matmul_pallas" — the matmul form as a Pallas MXU kernel.
+  impl="auto"    — pallas on TPU, matmul on GPU, else jnp.
 """
 
 from __future__ import annotations
@@ -15,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .support_count import support_count_pallas, DEFAULT_BC, DEFAULT_BT
+from .support_count import (support_count_matmul, support_count_matmul_pallas,
+                            support_count_pallas, DEFAULT_BC, DEFAULT_BT)
 
 
 def _backend() -> str:
@@ -82,14 +86,20 @@ def support_count(cands, txns, impl: str = "auto",
     if C == 0:
         return jnp.zeros((0,), jnp.int32)
     if impl == "auto":
-        impl = "pallas" if _backend() == "tpu" else "jnp"
+        backend = _backend()
+        impl = {"tpu": "pallas", "gpu": "matmul"}.get(backend, "jnp")
     if impl == "jnp":
         return _support_count_jnp(cands, txns)
-    if impl == "pallas":
-        interpret = _backend() != "tpu"
+    if impl == "matmul":
+        return support_count_matmul(cands, txns)
+    if impl in ("pallas", "matmul_pallas", "pallas_interpret",
+                "matmul_pallas_interpret"):
+        interpret = impl.endswith("_interpret") or _backend() != "tpu"
         n_pad = (-txns.shape[0]) % bt
         cp = _pad_rows(cands, bc)
         tp = _pad_rows(txns, bt)
-        out = support_count_pallas(cp, tp, bc=bc, bt=bt, interpret=interpret)[:C]
+        fn = (support_count_matmul_pallas if impl.startswith("matmul")
+              else support_count_pallas)
+        out = fn(cp, tp, bc=bc, bt=bt, interpret=interpret)[:C]
         return out - _empty_cand_correction(cands, n_pad)
     raise ValueError(f"unknown impl {impl!r}")

@@ -144,3 +144,124 @@ def rule_scores_jnp(antes: jax.Array, cons: jax.Array, scores: jax.Array,
 
     _, out = jax.lax.scan(body, None, chunks)
     return out.reshape(-1, R)[:Q]
+
+
+# ---------------------------------------------------------------------------
+# Matmul (bit-plane int8 dot_general) formulation — DESIGN.md §10.
+#
+# Containment via the overlap identity: with B_b (Q, B) basket bit planes and
+# A_b (R, B) antecedent planes, ante[r] ⊆ basket[q] iff
+# Σ_b B_b[q,b]·A_b[r,b] == popcount(ante[r]).  The consequent-novelty test is
+# a second matmul against the consequent planes (one fused (Q,B)×(B,2R) dot
+# would also work, but two dots keep the tiny-W case readable and XLA fuses
+# the compare/select either way).  Integer overlaps → float32 select bits
+# identical to the popcount twins.
+# ---------------------------------------------------------------------------
+
+_DOT_LAST = (((1,), (1,)), ((), ()))      # contract the bit-plane axis of both
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "exclude_contained"))
+def rule_scores_matmul(antes: jax.Array, cons: jax.Array, scores: jax.Array,
+                       baskets: jax.Array, q_block: int = DEFAULT_Q_BLOCK,
+                       exclude_contained: bool = True) -> jax.Array:
+    """Blocked-jnp matmul twin of :func:`rule_scores_jnp` (bit-exact)."""
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    R, W = antes.shape
+    Q = baskets.shape[0]
+    antes = antes.astype(jnp.uint32)
+    cons = cons.astype(jnp.uint32)
+    scores = scores.astype(jnp.float32)
+    ab = junpack_bits(antes)                          # (R, B) int8
+    aw = jpopcount_rows(antes)                        # (R,) int32
+    if exclude_contained:
+        cb = junpack_bits(cons)
+        cw = jpopcount_rows(cons)
+    pad_q = (-Q) % q_block
+    if pad_q:
+        baskets = jnp.concatenate(
+            [baskets, jnp.zeros((pad_q, W), baskets.dtype)], axis=0)
+    chunks = baskets.astype(jnp.uint32).reshape(-1, q_block, W)
+
+    def body(_, blk):                       # blk: (q_block, W)
+        bb = junpack_bits(blk)                        # (q_block, B) int8
+        ov = jax.lax.dot_general(bb, ab, _DOT_LAST,
+                                 preferred_element_type=jnp.int32)
+        ok = ov == aw[None, :]
+        if exclude_contained:
+            ovc = jax.lax.dot_general(bb, cb, _DOT_LAST,
+                                      preferred_element_type=jnp.int32)
+            ok &= ovc != cw[None, :]
+        return None, jnp.where(ok, scores[None, :], -jnp.inf)
+
+    _, out = jax.lax.scan(body, None, chunks)
+    return out.reshape(-1, R)[:Q]
+
+
+def _rule_scores_matmul_kernel(a_ref, aw_ref, c_ref, cw_ref, s_ref, b_ref,
+                               o_ref, *, exclude_contained: bool):
+    ov = jax.lax.dot_general(b_ref[...], a_ref[...], _DOT_LAST,
+                             preferred_element_type=jnp.int32)   # (BQ, BR)
+    ok = ov == aw_ref[...][None, :]
+    if exclude_contained:
+        ovc = jax.lax.dot_general(b_ref[...], c_ref[...], _DOT_LAST,
+                                  preferred_element_type=jnp.int32)
+        ok &= ovc != cw_ref[...][None, :]
+    o_ref[...] = jnp.where(ok, s_ref[...][None, :], -jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "br", "exclude_contained",
+                                    "interpret"))
+def rule_scores_matmul_pallas(antes: jax.Array, cons: jax.Array,
+                              scores: jax.Array, baskets: jax.Array,
+                              bq: int = DEFAULT_BQ, br: int = DEFAULT_BR,
+                              exclude_contained: bool = True,
+                              interpret: bool = False) -> jax.Array:
+    """Masked rule-score matrix via the bit-plane matmul Pallas kernel.
+
+    Same pad semantics as :func:`rule_scores_pallas`: pad rules get empty
+    antecedents (overlap 0 == width 0 → match everything) with ``-inf``
+    scores and empty consequents (never novel under ``exclude_contained``),
+    pad baskets are sliced off before return.
+    """
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    R, W = antes.shape
+    Q, Wb = baskets.shape
+    assert W == Wb, (W, Wb)
+    pad_r = (-R) % br
+    if pad_r:
+        zrow = jnp.zeros((pad_r, W), antes.dtype)
+        antes = jnp.concatenate([antes, zrow], axis=0)
+        cons = jnp.concatenate([cons, zrow], axis=0)
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad_r,), -jnp.inf, scores.dtype)])
+    pad_q = (-Q) % bq
+    if pad_q:
+        baskets = jnp.concatenate(
+            [baskets, jnp.zeros((pad_q, W), baskets.dtype)], axis=0)
+    antes = antes.astype(jnp.uint32)
+    cons = cons.astype(jnp.uint32)
+    ab, aw = junpack_bits(antes), jpopcount_rows(antes)
+    cb, cw = junpack_bits(cons), jpopcount_rows(cons)
+    bb = junpack_bits(baskets.astype(jnp.uint32))
+    B = ab.shape[1]
+    Rp, Qp = antes.shape[0], baskets.shape[0]
+    grid = (Qp // bq, Rp // br)
+    out = pl.pallas_call(
+        functools.partial(_rule_scores_matmul_kernel,
+                          exclude_contained=exclude_contained),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, B), lambda qi, ri: (ri, 0)),
+            pl.BlockSpec((br,), lambda qi, ri: (ri,)),
+            pl.BlockSpec((br, B), lambda qi, ri: (ri, 0)),
+            pl.BlockSpec((br,), lambda qi, ri: (ri,)),
+            pl.BlockSpec((br,), lambda qi, ri: (ri,)),
+            pl.BlockSpec((bq, B), lambda qi, ri: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, br), lambda qi, ri: (qi, ri)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Rp), jnp.float32),
+        interpret=interpret,
+    )(ab, aw, cb, cw, scores.astype(jnp.float32), bb)
+    return out[:Q, :R]

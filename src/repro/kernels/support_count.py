@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BC = 256
 DEFAULT_BT = 512
+DEFAULT_MATMUL_BLOCK = 2048   # txn rows per dot_general chunk (jnp matmul form)
 
 
 def _support_count_kernel(c_ref, t_ref, o_ref, *, n_words: int):
@@ -72,3 +73,102 @@ def support_count_pallas(cands: jax.Array, txns: jax.Array,
         out_shape=jax.ShapeDtypeStruct((C,), jnp.int32),
         interpret=interpret,
     )(cands.astype(jnp.uint32), txns.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Matmul (bit-plane int8 dot_general) formulation — DESIGN.md §10.
+#
+# Containment counting as a matmul: with C_b = junpack_bits(cands) (C, B) and
+# T_b = junpack_bits(txns) (T, B), B = W·32,
+#
+#     overlap[i, j] = Σ_b C_b[i, b] · T_b[j, b] = |cand_i ∩ txn_j|
+#     match[i, j]   = overlap[i, j] == popcount(cand_i)
+#     count[i]      = Σ_j match[i, j]
+#
+# All arithmetic is integer, so the form is bit-exact against the popcount
+# impls; the dominant cost is an (C, B) × (B, T) int8 matmul the MXU/tensor
+# cores were built for, instead of a VPU bitwise-op stream.
+# ---------------------------------------------------------------------------
+
+_DOT_LAST = (((1,), (1,)), ((), ()))      # contract the bit-plane axis of both
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def support_count_matmul(cands: jax.Array, txns: jax.Array,
+                         block: int = DEFAULT_MATMUL_BLOCK) -> jax.Array:
+    """Blocked-jnp matmul twin: scan txn chunks, int8 dot_general per chunk.
+
+    Memory: O(C · block) int32 overlap per step instead of O(C · T).
+    Semantics match ``_support_count_jnp`` exactly (internal zero-pad rows
+    that spuriously match empty candidates are subtracted before return).
+    """
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    C, W = cands.shape
+    cands = cands.astype(jnp.uint32)
+    cb = junpack_bits(cands)                          # (C, B) int8
+    widths = jpopcount_rows(cands)                    # (C,) int32
+    n_pad = (-txns.shape[0]) % block
+    if n_pad:
+        txns = jnp.concatenate(
+            [txns, jnp.zeros((n_pad, W), txns.dtype)], axis=0)
+    chunks = txns.astype(jnp.uint32).reshape(-1, block, W)
+
+    def body(acc, chunk):
+        tb = junpack_bits(chunk)                      # (block, B) int8
+        ov = jax.lax.dot_general(cb, tb, _DOT_LAST,
+                                 preferred_element_type=jnp.int32)
+        return acc + (ov == widths[:, None]).sum(axis=1, dtype=jnp.int32), None
+
+    init = jnp.zeros((C,), jnp.int32)
+    acc, _ = jax.lax.scan(body, init, chunks)
+    # zero-padded txn rows overlap 0 == width 0: they match (only) empty
+    # candidates — subtract, mirroring ops._empty_cand_correction
+    return acc - jnp.where(widths == 0, jnp.int32(n_pad), jnp.int32(0))
+
+
+def _support_count_matmul_kernel(c_ref, w_ref, t_ref, o_ref):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ov = jax.lax.dot_general(c_ref[...], t_ref[...], _DOT_LAST,
+                             preferred_element_type=jnp.int32)   # (BC, BT)
+    o_ref[...] += (ov == w_ref[...][:, None]).sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bt", "interpret"))
+def support_count_matmul_pallas(cands: jax.Array, txns: jax.Array,
+                                bc: int = DEFAULT_BC, bt: int = DEFAULT_BT,
+                                interpret: bool = False) -> jax.Array:
+    """Support counts via the bit-plane matmul Pallas kernel (MXU form).
+
+    Bit planes are unpacked outside the kernel (HBM int8 matrices, B = W·32
+    columns); each grid step does one (BC, B) × (B, BT) int8 ``dot_general``
+    into the MXU and an equality-compare reduce on the VPU.  Shapes must be
+    pre-padded: C % bc == 0 and T % bt == 0 (see ops.py wrapper).
+    """
+    from repro.core.bitset import jpopcount_rows, junpack_bits
+    C, W = cands.shape
+    T, Wt = txns.shape
+    assert W == Wt, (W, Wt)
+    assert C % bc == 0 and T % bt == 0, (C, bc, T, bt)
+    cands = cands.astype(jnp.uint32)
+    cb = junpack_bits(cands)                      # (C, B) int8
+    tb = junpack_bits(txns.astype(jnp.uint32))    # (T, B) int8
+    widths = jpopcount_rows(cands)                # (C,) int32
+    B = cb.shape[1]
+    grid = (C // bc, T // bt)
+    return pl.pallas_call(
+        _support_count_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, B), lambda ci, ti: (ci, 0)),
+            pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+            pl.BlockSpec((bt, B), lambda ci, ti: (ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.int32),
+        interpret=interpret,
+    )(cb, widths, tb)

@@ -128,3 +128,120 @@ def vertical_count_jnp(vdb: jax.Array, cand_idx: jax.Array,
 
     _, counts = jax.lax.scan(body, None, blocks)
     return counts.reshape(-1)[:C]
+
+
+# ---------------------------------------------------------------------------
+# Matmul (bit-plane int8 dot_general) formulation — DESIGN.md §10.
+#
+# The candidate→item index table becomes a 0/1 membership matrix A (C, I)
+# (scatter; duplicate slots collapse, matching the AND semantics of the
+# popcount form), the vertical DB a bit matrix V (I, Tn); then
+#
+#     present[c, t] = Σ_i A[c, i] · V[i, t]         (one int8 matmul)
+#     match[c, t]   = present[c, t] == Σ_i A[c, i]  ∧  valid[t]
+#     count[c]      = Σ_t match[c, t]
+#
+# Sentinel-padded slots never enter A, so the valid-transaction row plays the
+# same role as in the popcount form (padded txn columns are all-zero and the
+# empty candidate counts exactly the valid transactions).
+# ---------------------------------------------------------------------------
+
+
+def _vertical_membership(idx_blk: jax.Array, n_items: int):
+    """(block, kmax) ids (sentinel = n_items) → 0/1 (block, I) int8 + per-row
+    distinct-item counts (block,) int32."""
+    blk = idx_blk.shape[0]
+    A = jnp.zeros((blk, n_items + 1), jnp.int8).at[
+        jnp.arange(blk)[:, None], idx_blk].set(1)
+    A = A[:, :n_items]                               # drop the sentinel column
+    return A, A.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vertical_count_matmul(vdb: jax.Array, cand_idx: jax.Array,
+                          block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Blocked-jnp matmul twin of :func:`vertical_count_jnp` (bit-exact)."""
+    from repro.core.bitset import junpack_bits
+    vdb = jnp.asarray(vdb)
+    cand_idx = jnp.asarray(cand_idx)
+    I1, _ = vdb.shape
+    n_items = I1 - 1
+    C, kmax = cand_idx.shape
+    vbits = junpack_bits(vdb)                        # (I+1, Tn) int8
+    item_bits = vbits[:n_items]
+    valid = vbits[n_items] > 0                       # (Tn,) bool
+    pad = (-C) % block
+    if pad:
+        cand_idx = jnp.concatenate(
+            [cand_idx, jnp.full((pad, kmax), n_items, cand_idx.dtype)], axis=0)
+    blocks = cand_idx.reshape(-1, block, kmax)
+
+    def body(_, idx_blk):
+        A, nreal = _vertical_membership(idx_blk, n_items)
+        ov = jax.lax.dot_general(A, item_bits, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        match = (ov == nreal[:, None]) & valid[None, :]
+        return None, match.sum(axis=1, dtype=jnp.int32)
+
+    _, counts = jax.lax.scan(body, None, blocks)
+    return counts.reshape(-1)[:C]
+
+
+def _vertical_matmul_kernel(a_ref, n_ref, v_ref, val_ref, o_ref):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ov = jax.lax.dot_general(a_ref[...], v_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)  # (BC, BT)
+    match = (ov == n_ref[...][:, None]) & (val_ref[...][None, :] > 0)
+    o_ref[...] += match.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bt", "interpret"))
+def vertical_count_matmul_pallas(vdb: jax.Array, cand_idx: jax.Array,
+                                 bc: int = 256, bt: int = 512,
+                                 interpret: bool = False) -> jax.Array:
+    """Vertical matmul counting as a Pallas kernel: (BC, I) × (I, BT) int8
+    dots on the MXU, candidates tiled over the grid's first axis and
+    transaction columns over the second (the item axis stays whole — catalogs
+    are small next to the transaction axis)."""
+    from repro.core.bitset import junpack_bits
+    vdb = jnp.asarray(vdb)
+    cand_idx = jnp.asarray(cand_idx)
+    I1, _ = vdb.shape
+    n_items = I1 - 1
+    C, kmax = cand_idx.shape
+    vbits = junpack_bits(vdb)
+    item_bits, valid = vbits[:n_items], vbits[n_items]
+    A, nreal = _vertical_membership(cand_idx, n_items)
+    pad_c = (-C) % bc
+    if pad_c:
+        A = jnp.concatenate([A, jnp.zeros((pad_c, n_items), A.dtype)], axis=0)
+        # a padded candidate row would count every valid txn (empty-set
+        # semantics); poison its width so it never matches instead
+        nreal = jnp.concatenate(
+            [nreal, jnp.full((pad_c,), -1, nreal.dtype)])
+    Tn = item_bits.shape[1]
+    pad_t = (-Tn) % bt
+    if pad_t:
+        item_bits = jnp.concatenate(
+            [item_bits, jnp.zeros((n_items, pad_t), item_bits.dtype)], axis=1)
+        valid = jnp.concatenate([valid, jnp.zeros((pad_t,), valid.dtype)])
+    grid = (A.shape[0] // bc, item_bits.shape[1] // bt)
+    out = pl.pallas_call(
+        _vertical_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, n_items), lambda ci, ti: (ci, 0)),
+            pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+            pl.BlockSpec((n_items, bt), lambda ci, ti: (0, ti)),
+            pl.BlockSpec((bt,), lambda ci, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda ci, ti: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((A.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(A, nreal, item_bits, valid)
+    return out[:C]

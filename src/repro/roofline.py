@@ -44,13 +44,86 @@ HW = {
 # comparisons — for every impl: vertical/delta layouts do proportionally less
 # word work, but the constant of proportionality is absorbed by the per-key
 # slope ``b``, so the affine family is the same and fits never mix bases.
+#
+# Device→host transfers ride in the same basis: one PCIe byte is priced at
+# ``XFER_OPS_PER_BYTE`` candidate-word comparisons (a ~10 GB/s link against a
+# compute path that retires hundreds of Gops/s of word tests), so
+# impl/fusion decisions see the transfer cost of the result shapes they
+# produce, not only the counting work (PR 6 follow-on, DESIGN.md §10).
 
-def count_job_ops(n_candidates: int, n_txns: int, n_words: int = 1) -> float:
+XFER_OPS_PER_BYTE = 64.0
+
+
+def count_job_ops(n_candidates: int, n_txns: int, n_words: int = 1,
+                  bytes_to_host: float = 0.0) -> float:
     """Work of one support-counting job in the measured-ops basis: C·T·W
     candidate-word comparisons (each of C candidates tested against each of
-    T transactions over W mask words)."""
-    return float(max(int(n_candidates), 1)) * max(int(n_txns), 1) * \
+    T transactions over W mask words), plus the job's device→host result
+    traffic priced at ``XFER_OPS_PER_BYTE`` ops per byte."""
+    ops = float(max(int(n_candidates), 1)) * max(int(n_txns), 1) * \
         max(int(n_words), 1)
+    return ops + max(float(bytes_to_host), 0.0) * XFER_OPS_PER_BYTE
+
+
+# -- counting-kernel roofline (DESIGN.md §10) ----------------------------------
+#
+# Per-backend peaks for the achieved-vs-peak fractions BENCH_kernels.json
+# records.  The matmul (bit-plane dot_general) forms are compute-bound and
+# are compared against the int8 matmul peak; the popcount forms stream words
+# and are compared against memory bandwidth.  Figures are nominal
+# device-class numbers (TPU v5e-class MXU, A100-class tensor cores, one
+# desktop-class CPU socket) — the *fraction* is the methodology artifact, so
+# order-of-magnitude peaks are enough to tell "near roofline" from "2% of
+# roofline".
+
+COUNT_PEAKS = {
+    "cpu": {"int8_ops": 2.0e12, "mem_bw": 50e9},
+    "gpu": {"int8_ops": 624e12, "mem_bw": 1550e9},
+    "tpu": {"int8_ops": 394e12, "mem_bw": 819e9},
+}
+
+
+def count_kernel_roofline(family: str, *, C: int, T: int, W: int = 1,
+                          kmax: int = 1, seconds: float,
+                          backend: str) -> dict:
+    """Achieved-vs-peak terms for one benched counting-kernel record.
+
+    Args:
+      family: "matmul" (bit-plane dot form — any layout), "horizontal"
+              (popcount subset scan) or "vertical" (popcount gather-AND).
+      C/T/W/kmax: the benched shape (T = transaction rows).
+      seconds: measured wall time of one call.
+      backend: "cpu" | "gpu" | "tpu".
+
+    Returns a dict with the achieved rate, the peak it is measured against,
+    the ``peak_frac`` ratio, and which resource bounds the form.
+    """
+    peaks = COUNT_PEAKS.get(backend, COUNT_PEAKS["cpu"])
+    s = max(float(seconds), 1e-12)
+    if family == "matmul":
+        # (C, W·32) × (W·32, T) int8 dot: 2 ops (mul+add) per MAC
+        macs = float(C) * T * W * 32
+        achieved = 2.0 * macs / s
+        peak = peaks["int8_ops"]
+        bound = "compute"
+        unit = "int8_ops_per_s"
+    elif family == "vertical":
+        # each candidate gathers kmax item rows of T/32 words (4 B each)
+        bytes_touched = 4.0 * C * kmax * max(T / 32.0, 1.0)
+        achieved = bytes_touched / s
+        peak = peaks["mem_bw"]
+        bound = "memory"
+        unit = "bytes_per_s"
+    else:                       # horizontal popcount subset scan
+        # word loads for both operands + the (C, T) match matrix traffic
+        bytes_touched = 4.0 * W * (float(C) + T) + float(C) * T
+        achieved = bytes_touched / s
+        peak = peaks["mem_bw"]
+        bound = "memory"
+        unit = "bytes_per_s"
+    return {"family": family, "bound": bound, "unit": unit,
+            "achieved": float(achieved), "peak": float(peak),
+            "peak_frac": float(achieved / peak)}
 
 
 def predicted_vs_achieved(predicted_s: float, achieved_s: float) -> dict:

@@ -37,12 +37,16 @@ import numpy as np
 from repro.core.bitset import n_words, unpack_itemsets
 from repro.core.policy import ALGORITHMS, PhaseStats
 from repro.core.rules import RuleSet
-from repro.kernels.autotune import DEFAULTS, tuned_blocks
-from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
+from repro.kernels.autotune import DEFAULTS, tuned_blocks, tuned_plan
+from repro.kernels.rule_match import (rule_scores_jnp, rule_scores_matmul,
+                                      rule_scores_matmul_pallas,
+                                      rule_scores_pallas)
+from repro.roofline import XFER_OPS_PER_BYTE
 
 from .common import MIN_QUERY_BUCKET, bucket_rows, pack_baskets
 
-RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret", "matmul",
+              "matmul_pallas", "matmul_pallas_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,9 +98,12 @@ class RuleServeEngine:
     Args:
       rules: a RuleSet from ``core.rules.generate_ruleset``.
       top_k: default number of recommendations per query.
-      impl: "auto" | "jnp" | "pallas" | "pallas_interpret" — the containment
-        scoring path ("auto": pallas on TPU, jnp elsewhere; "pallas" off-TPU
-        degrades to interpret mode, like the counting kernels).
+      impl: one of ``RULE_IMPLS`` — the containment scoring path: popcount
+        ("jnp"/"pallas") or bit-plane matmul ("matmul"/"matmul_pallas",
+        DESIGN.md §10) forms; "auto" resolves per dispatch shape to the
+        cross-family autotune plan winner when autotune is on (static
+        fallback: pallas on TPU, matmul on GPU, jnp elsewhere); "*pallas"
+        off-TPU degrades to interpret mode, like the counting kernels.
       algorithm: pass-combining policy fusing queued query batches per
         dispatch (core/policy.py; "spc" = strict per-batch dispatch).
       max_fuse: cap on batches fused into one dispatch.
@@ -131,11 +138,10 @@ class RuleServeEngine:
             raise ValueError(
                 f"unknown algorithm {algorithm!r}; options: {sorted(ALGORITHMS)}")
         backend = jax.default_backend()
-        if impl == "auto":
-            impl = "pallas" if backend == "tpu" else "jnp"
-        self._interpret = (impl == "pallas_interpret"
-                           or (impl == "pallas" and backend != "tpu"))
-        self.impl = "pallas" if impl.startswith("pallas") else "jnp"
+        self._backend = backend
+        # "auto" stays unresolved here: _fn resolves it per dispatch shape
+        # from the cross-family plan (DESIGN.md §10)
+        self.impl = impl
         self.top_k = top_k
         self.max_fuse = max_fuse
         self.exclude_contained = exclude_contained
@@ -198,31 +204,47 @@ class RuleServeEngine:
             return dict(DEFAULTS[impl_key])
         return tuned_blocks(impl_key, C=max(len(state), 1), T=Qp, W=state.W)
 
+    def _resolve_impl(self, state: _RuleState, Qp: int) -> str:
+        impl = self.impl
+        if impl != "auto":
+            return impl
+        plan = (tuned_plan("rules", C=max(len(state), 1), T=Qp, W=state.W)
+                if self.autotune else None)
+        if plan is not None and plan["impl"] in RULE_IMPLS:
+            return plan["impl"]
+        return {"tpu": "pallas", "gpu": "matmul"}.get(self._backend, "jnp")
+
     def _fn(self, state: _RuleState, Qp: int, k: int):
         key = (Qp, k)
         if key in state.jitted:
             return state.jitted[key]
         ante, cons, scores = state.d_ante, state.d_cons, state.d_scores
         excl = self.exclude_contained
-        if self.impl == "jnp":
-            blocks = self._blocks(state, "rules_jnp", Qp)
+        impl = self._resolve_impl(state, Qp)
+        if impl in ("jnp", "matmul"):
+            blocks = self._blocks(state, f"rules_{impl}", Qp)
             qb = min(blocks["q_block"], Qp)
+            score_fn = rule_scores_matmul if impl == "matmul" else rule_scores_jnp
 
             def fn(baskets):
-                s = rule_scores_jnp(ante, cons, scores, baskets,
-                                    q_block=qb, exclude_contained=excl)
+                s = score_fn(ante, cons, scores, baskets,
+                             q_block=qb, exclude_contained=excl)
                 return jax.lax.top_k(s, k)
         else:
-            impl_key = ("rules_pallas_interpret" if self._interpret
-                        else "rules_pallas")
+            interpret = (impl.endswith("_interpret")
+                         or self._backend != "tpu")
+            base = ("rules_matmul_pallas" if impl.startswith("matmul")
+                    else "rules_pallas")
+            impl_key = f"{base}_interpret" if interpret else base
             blocks = self._blocks(state, impl_key, Qp)
-            interpret = self._interpret
+            score_fn = (rule_scores_matmul_pallas if impl.startswith("matmul")
+                        else rule_scores_pallas)
 
             def fn(baskets):
-                s = rule_scores_pallas(ante, cons, scores, baskets,
-                                       bq=blocks["bq"], br=blocks["br"],
-                                       exclude_contained=excl,
-                                       interpret=interpret)
+                s = score_fn(ante, cons, scores, baskets,
+                             bq=blocks["bq"], br=blocks["br"],
+                             exclude_contained=excl,
+                             interpret=interpret)
                 return jax.lax.top_k(s, k)
         state.jitted[key] = jax.jit(fn)
         return state.jitted[key]
@@ -309,7 +331,14 @@ class RuleServeEngine:
         i, phase_idx = 0, 0
         while i < len(batches):
             if self.policy is None:   # measured: predicted latency vs budget
-                work = float(n_rules) * state.W * max(len(batches[i]), 1)
+                # per-query work: rule·word containment tests plus the top-k
+                # result transfer (8 B per fetched rule slot) in the shared
+                # ops basis (roofline.XFER_OPS_PER_BYTE, DESIGN.md §10)
+                kf_est = (min(k * self.overfetch, n_rules)
+                          if self.dedup_consequents else k)
+                per_query = (float(n_rules) * state.W
+                             + 8.0 * kf_est * XFER_OPS_PER_BYTE)
+                work = per_query * max(len(batches[i]), 1)
                 nfuse = self.controller.choose_fusion(
                     work_per_unit=work, queued=len(batches) - i,
                     max_fuse=self.max_fuse,
@@ -347,8 +376,9 @@ class RuleServeEngine:
                 off += sz
             n_q = len(flat)
             if self.controller is not None and n_q:
-                self.controller.observe_serve(float(n_rules) * state.W,
-                                              n_q, elapsed)
+                self.controller.observe_serve(
+                    float(n_rules) * state.W + 8.0 * kf * XFER_OPS_PER_BYTE,
+                    n_q, elapsed)
             history.append(PhaseStats(n_rules * max(n_q, 1),
                                       max(n_q, 1), elapsed))
             records.append(RuleServeRecord(phase_idx, nfuse, n_q, elapsed))

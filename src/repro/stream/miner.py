@@ -52,7 +52,8 @@ from .tables import (TrackedTables, build_tracked_levels, derive_frequent,
                      levels_equal)
 from .window import TransactionWindow
 
-STREAM_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+STREAM_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret", "matmul",
+                "matmul_pallas", "matmul_pallas_interpret")
 
 
 @dataclasses.dataclass
@@ -83,8 +84,11 @@ class StreamMiner:
       algorithm: pass-combining driver for full re-mines (core/policy.py).
       min_confidence: rule threshold for the published RuleSet.
       runtime: shared MapReduceRuntime (defaults to all local devices).
-      impl: delta-counting implementation ("auto": pallas on TPU, jnp
-        elsewhere; "pallas" off-TPU degrades to interpret mode).
+      impl: delta-counting implementation — popcount ("jnp"/"pallas") or
+        bit-plane matmul ("matmul"/"matmul_pallas") forms (DESIGN.md §10);
+        "auto" follows the autotuner's cross-family plan winner (static
+        fallback: pallas on TPU, jnp elsewhere); "*pallas" off-TPU degrades
+        to interpret mode.
       staleness_factor: β-style scale on the re-mine trigger — re-mine when
         ``drift × staleness > staleness_factor × predicted_remine_seconds``.
       controller: a :class:`repro.costmodel.CostController` shared with the

@@ -90,6 +90,20 @@ def test_quickstart_surfaces_in_readme(surface):
     assert surface in (ROOT / "README.md").read_text()
 
 
+def test_matmul_kernel_family_documented():
+    """The §10 counting-as-matmul subsystem stays documented: the README
+    impl table, the DESIGN section, and the roofline/plan surfaces."""
+    readme = (ROOT / "README.md").read_text()
+    assert "Kernel implementation families" in readme
+    for impl in ("matmul", "vertical_matmul", "matmul_pallas"):
+        assert f"`{impl}`" in readme, f"README impl table must list {impl}"
+    assert 10 in _design_sections()
+    design = (ROOT / "DESIGN.md").read_text()
+    for surface in ("junpack_bits", "tuned_plan", "count_kernel_roofline",
+                    "count_winner", "XFER_OPS_PER_BYTE"):
+        assert surface in design, f"DESIGN.md §10 must document {surface}"
+
+
 def test_measured_policy_documented():
     """The cost-model subsystem's public surfaces stay documented: the
     `measured` algorithm row in the README table and the §9 architecture
