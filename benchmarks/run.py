@@ -11,7 +11,7 @@ import time
 from . import (bench_candidates, bench_costmodel, bench_decode_fusion,
                bench_exec_time, bench_kernels, bench_lk_counts,
                bench_phase_breakdown, bench_rules, bench_scalability,
-               bench_speedup, bench_stream)
+               bench_scaling, bench_speedup, bench_stream)
 
 SUITES = {
     "exec_time": bench_exec_time,          # Figs. 2-4
@@ -25,6 +25,7 @@ SUITES = {
     "rules": bench_rules,                  # rule generation + serving (§7)
     "stream": bench_stream,                # streaming incremental mining (§8)
     "costmodel": bench_costmodel,          # calibrated cost model (§9)
+    "scaling": bench_scaling,              # device-count scaling curves (§11)
 }
 
 

@@ -1,42 +1,75 @@
-"""Distributed mining end-to-end: shard the database over a device mesh,
-run a multi-pass phase per dispatch, checkpoint between phases, and resume
-after a simulated failure.
+"""Cluster-scale mining end-to-end (DESIGN.md §11): lay a 2-D
+(data, cand) mesh over every device, mine with elastic per-level
+repartitioning, survive an injected shard failure via the retry protocol,
+and resume from an inter-phase checkpoint — all bit-identical to the
+sequential oracle.
 
-  PYTHONPATH=src python examples/mine_distributed.py
+Run with simulated devices to see the mesh in action on one host:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/mine_distributed.py --n-cand-shards 2
+
+On a real cluster, start the same command on every worker with the
+coordinator triple set (--coordinator host:port --num-processes N
+--process-id i, or the JAX_* env vars) — `runtime_from_args` initializes
+jax.distributed before building the mesh.
 """
 
+import argparse
 import shutil
 import tempfile
 
 from repro.core import mine, sequential_apriori
-from repro.core.mapreduce import MapReduceRuntime
-from repro.data import dataset_by_name
+from repro.launch.cliopts import add_mesh_args, runtime_from_args
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-sup", type=float, default=0.22)
+    add_mesh_args(ap)
+    args = ap.parse_args()
+
+    # import after arg parsing: runtime_from_args may init jax.distributed
+    from repro.data import dataset_by_name
     txns, n_items = dataset_by_name("c20d10k", scale=0.1)
-    runtime = MapReduceRuntime()  # all local devices along the `data` axis
-    print(f"runtime: {runtime.n_data_shards} data shard(s), impl={runtime.impl}")
+
+    runtime, mesh_kwargs = runtime_from_args(args)
+    print(f"mesh: {runtime.mesh_split[0]} data x "
+          f"{runtime.mesh_split[1]} cand shard(s), impl={runtime.impl}, "
+          f"elastic={mesh_kwargs['elastic']}")
 
     ckpt = tempfile.mkdtemp(prefix="mine_ckpt_")
     try:
-        # phase 1..2 only, then "crash"
-        partial = mine(txns, n_items=n_items, min_sup=0.22,
+        # -- fault tolerance: fail the second counting job once; the driver
+        # re-places the shards from the host copy and re-dispatches
+        state = {"fired": False}
+
+        def fail_once(event, k):
+            if event == "count_dispatch" and k > 1 and not state["fired"]:
+                state["fired"] = True
+                raise RuntimeError("injected shard failure")
+
+        partial = mine(txns, n_items=n_items, min_sup=args.min_sup,
                        algorithm="optimized_etdpc", runtime=runtime,
-                       checkpoint_dir=ckpt, max_k=2)
+                       checkpoint_dir=ckpt, max_k=2,
+                       count_hook=fail_once, **mesh_kwargs)
         print(f"'crashed' after {partial.n_phases} phases "
-              f"(checkpoint at k={max(partial.levels)})")
+              f"(checkpoint at k={max(partial.levels)}); "
+              f"survived {partial.retries} injected failure(s), "
+              f"{partial.repartitions} elastic repartition(s)")
 
-        # restart: resumes from the checkpoint, finishes the remaining levels
-        full = mine(txns, n_items=n_items, min_sup=0.22,
+        # -- restart: resumes from the checkpoint, finishes the rest; the
+        # controller re-prices the mesh split for the later (wider) levels
+        full = mine(txns, n_items=n_items, min_sup=args.min_sup,
                     algorithm="optimized_etdpc", runtime=runtime,
-                    checkpoint_dir=ckpt, resume=True)
+                    checkpoint_dir=ckpt, resume=True, **mesh_kwargs)
         print(f"resumed run finished: levels={sorted(full.levels)} "
-              f"dispatches={full.dispatches}")
+              f"dispatches={full.dispatches} "
+              f"repartitions={full.repartitions}")
 
-        oracle = sequential_apriori(txns, 0.22)
+        oracle = sequential_apriori(txns, args.min_sup)
         assert full.itemsets() == oracle
-        print("restart-consistency vs oracle ✓")
+        print("failure + restart consistency vs oracle ✓")
     finally:
         shutil.rmtree(ckpt, ignore_errors=True)
 

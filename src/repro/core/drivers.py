@@ -46,6 +46,8 @@ class MiningResult:
     dispatches: int
     compiles: int
     straggler_events: int = 0
+    retries: int = 0                # failed counting jobs recovered by retry
+    repartitions: int = 0           # elastic mesh re-layouts this run (§11)
     overlap_seconds: float = 0.0    # host gen time overlapped with counting jobs
     decisions: list = dataclasses.field(default_factory=list)
     # cost-controller telemetry rows for this run (DESIGN.md §9)
@@ -104,8 +106,10 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
          runtime: MapReduceRuntime | None = None, policy_kwargs: dict | None = None,
          checkpoint_dir: str | None = None, resume: bool = True,
          spec_factor: float = 4.0, max_k: int = 64,
-         balance_shards_by_width: bool = False,
+         balance_shards_by_width: bool | None = None,
          pipeline: bool = True,
+         elastic: bool = True,
+         max_retries: int = 2,
          controller=None,
          count_hook=None) -> MiningResult:
     """Mine frequent itemsets with the selected pass-combining algorithm.
@@ -122,15 +126,31 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
       spec_factor: straggler threshold — a counting job slower than
         spec_factor × the median job time is re-dispatched once (speculative
         re-execution analogue; idempotent by determinism).
+      balance_shards_by_width: statically LPT-balance per-shard total
+        transaction width before scattering (the paper's InputSplit-sizing
+        concern).  Default None = measured policy: the controller enables
+        it only when the predicted straggler waste of the skewed contiguous
+        split exceeds the calibrated re-pack cost (DESIGN.md §11).
       pipeline: fused + async counting jobs with speculative gen/count overlap
         (DESIGN.md §4); False runs the legacy synchronous unfused loop.
+      elastic: per-level mesh repartitioning (DESIGN.md §11) — between
+        levels the controller prices the next phase's (C, T) extents under
+        every (data, cand) factorization of the devices and re-layouts when
+        a different split beats the current one by more than the measured
+        re-scatter cost.  No-op on one device or an uncalibrated model.
+      max_retries: per-phase fault tolerance — a counting job that raises
+        (a lost shard; injected via ``count_hook`` in tests) is re-dispatched
+        up to this many times after re-placing the shards from the retained
+        host copy.  Phases are idempotent, so the retried result is exact.
       controller: a :class:`repro.costmodel.CostController`.  Every run
         calibrates it from observed job timings (feeding the shared cost
         model); the ``measured`` policy also *decides* from it, and its
         predictions gate speculative-join overlap.  Default: a controller on
         the process-wide shared model (DESIGN.md §9).
-      count_hook: test hook called around each counting job (for fault and
-        straggler injection).
+      count_hook: test hook — called as ``("phase_start", k)`` before each
+        phase and ``("count_dispatch", k)`` after each counting job is
+        dispatched; raising from the latter simulates a shard failure and
+        exercises the retry protocol.
 
     Returns: MiningResult.
     """
@@ -149,25 +169,61 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         policy.controller = controller    # one controller decides AND observes
 
     if db_masks is None:
-        txn_list = [list(t) for t in transactions]
-        if balance_shards_by_width:
-            # static straggler mitigation: LPT-balance per-shard total width
-            # (the paper's InputSplit-sizing concern, §5.2)
-            from repro.data.loader import balance_shards
-            txn_list = balance_shards(txn_list, runtime.n_data_shards)
-        db_masks = pack_itemsets(txn_list, n_items)
+        db_masks = pack_itemsets([list(t) for t in transactions], n_items)
     db_masks = np.asarray(db_masks, dtype=np.uint32)
     n_txns = db_masks.shape[0]
+    n_words = db_masks.shape[1]
     min_count = min_sup * n_txns
+    # calibration context: within this run, job cost varies only with the
+    # candidate count — T, W and the mesh split are pinned here (DESIGN.md §9)
+    controller.set_count_context(n_txns=n_txns, n_words=n_words,
+                                 impl=runtime.impl,
+                                 n_data_shards=runtime.n_data_shards,
+                                 n_cand_shards=runtime.n_cand_shards)
+    if balance_shards_by_width is None and runtime.n_data_shards > 1:
+        # measured policy (DESIGN.md §11): pay the host re-pack only when
+        # the predicted straggler waste of the skewed split exceeds it
+        from repro.data.loader import shard_width_loads
+        balance_shards_by_width = controller.should_rebalance(
+            shard_width_loads(db_masks, runtime.n_data_shards),
+            est_candidates=max(4 * n_items, 256))
+    if balance_shards_by_width and runtime.n_data_shards > 1:
+        # static straggler mitigation: LPT-balance per-shard total width
+        # under the contiguous split (the paper's InputSplit concern, §5.2)
+        from repro.data.loader import balance_masks
+        t_bal = time.perf_counter()
+        db_masks = balance_masks(db_masks, runtime.n_data_shards)
+        controller.observe_rebalance(n_txns, time.perf_counter() - t_bal)
 
     t_start = time.perf_counter()
     overlap_start = runtime.stats.overlap_seconds
+    repartitions_start = runtime.stats.repartitions
     db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
-    # calibration context: within this run, job cost varies only with the
-    # candidate count — T and W are pinned here (DESIGN.md §9)
-    controller.set_count_context(n_txns=n_txns, n_words=db_masks.shape[1],
-                                 impl=runtime.impl)
+    # re-pin: an "auto" runtime may have switched impl at scatter time
+    controller.set_count_context(n_txns=n_txns, n_words=n_words,
+                                 impl=runtime.impl,
+                                 n_data_shards=runtime.n_data_shards,
+                                 n_cand_shards=runtime.n_cand_shards)
     decisions_mark = len(controller.decisions)
+    retries = 0
+
+    def _with_retry(dispatch):
+        # Per-phase fault tolerance (DESIGN.md §11): a counting job that
+        # raises (count_hook in tests, a real device loss in production)
+        # re-places the shards from the retained host copy and re-dispatches.
+        # Phases are idempotent — counting is deterministic, generation is
+        # pure — so the retried phase is exact.
+        nonlocal db_sharded, retries
+        attempt = 0
+        while True:
+            try:
+                return dispatch()
+            except Exception:
+                if attempt >= max_retries or runtime._db_masks is None:
+                    raise
+                attempt += 1
+                retries += 1
+                db_sharded = runtime.rescatter()
 
     levels: dict = {}
     phases: list[PhaseResult] = []
@@ -203,13 +259,20 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         t0 = time.perf_counter()
         bytes0 = runtime.stats.bytes_to_host
         singles = singleton_masks(n_items)
+
+        def _job1():
+            fut = runtime.phase_count_async(
+                db_sharded, bucket_pad(singles),
+                min_count=min_count if pipeline else None, n_valid=n_items)
+            if count_hook is not None:
+                count_hook("count_dispatch", 1)
+            res = fut.result()
+            return res if pipeline else res[:n_items]
+
         if pipeline:
-            keep, counts = runtime.phase_count_filtered(
-                db_sharded, bucket_pad(singles), min_count, n_valid=n_items)
-            # candidate-sharded jobs ignore n_valid (shard symmetry): re-slice
-            keep, counts = keep[:n_items], counts[:n_items]
+            keep, counts = _with_retry(_job1)
         else:
-            counts = runtime.phase_count(db_sharded, bucket_pad(singles))[:n_items]
+            counts = _with_retry(_job1)
             keep = counts >= min_count
         levels[1] = (singles[keep], counts[keep])
         el = time.perf_counter() - t0
@@ -239,32 +302,53 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         else:  # budget_alpha: ct = alpha * |L_prev last level|
             kwargs["budget"] = float(val) * prev_frequent.shape[0]
 
+        # expected candidate extent of the phase about to run — sizes both
+        # the speculation gate and the elastic mesh decision
+        est_cands = int(prev_frequent.shape[0] * (
+            kwargs["npass"] if "npass" in kwargs else max(val, 1.0)))
+
+        # elastic per-level repartitioning (DESIGN.md §11): candidate counts
+        # explode between levels, so re-price the (data, cand) split at each
+        # phase's extents and re-layout when the win beats the re-scatter
+        if elastic and runtime.mesh.size > 1 and runtime.can_repartition:
+            split = controller.choose_mesh(est_cands,
+                                           n_devices=runtime.mesh.size,
+                                           current=runtime.mesh_split)
+            if split is not None and split != runtime.mesh_split:
+                t_rp = time.perf_counter()
+                db_sharded = runtime.repartition(*split)
+                controller.observe_repartition(
+                    n_txns, n_words, time.perf_counter() - t_rp)
+                controller.set_count_context(
+                    n_txns=n_txns, n_words=n_words, impl=runtime.impl,
+                    n_data_shards=split[0], n_cand_shards=split[1])
+
         do_spec = pipeline and last_survival >= SPEC_SURVIVAL_THRESHOLD
         if do_spec:
             # size the overlap from predictions: a count job predicted shorter
             # than the join it would hide is not worth speculating over
-            est_cands = prev_frequent.shape[0] * (
-                kwargs["npass"] if "npass" in kwargs else max(val, 1.0))
-            do_spec = controller.should_speculate(int(est_cands))
+            do_spec = controller.should_speculate(est_cands)
         if count_hook is not None:
             count_hook("phase_start", k_prev)
         gen_method = "prefix" if pipeline else "pairwise"
         bytes0 = runtime.stats.bytes_to_host
-        res = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
-                        min_count, optimized=optimized, fused=pipeline,
-                        speculate=do_spec, spec=pending_spec,
-                        prev_keep=pending_keep, gen_method=gen_method, **kwargs)
+        res = _with_retry(lambda: run_phase(
+            runtime, db_sharded, n_txns, prev_frequent, k_prev,
+            min_count, optimized=optimized, fused=pipeline,
+            speculate=do_spec, spec=pending_spec,
+            prev_keep=pending_keep, gen_method=gen_method,
+            count_hook=count_hook, **kwargs))
         # Straggler mitigation: re-dispatch a pathologically slow counting job.
         if count_times and res.count_seconds > spec_factor * float(np.median(count_times)):
             straggler_events += 1
             t_re = time.perf_counter()
             # no speculation on the re-dispatch: the first run already did (and
             # counted) it, and a second join would double-book overlap_seconds
-            res2 = run_phase(runtime, db_sharded, n_txns, prev_frequent, k_prev,
-                             min_count, optimized=optimized, fused=pipeline,
-                             speculate=False, spec=pending_spec,
-                             prev_keep=pending_keep, gen_method=gen_method,
-                             **kwargs)
+            res2 = _with_retry(lambda: run_phase(
+                runtime, db_sharded, n_txns, prev_frequent, k_prev,
+                min_count, optimized=optimized, fused=pipeline,
+                speculate=False, spec=pending_spec,
+                prev_keep=pending_keep, gen_method=gen_method, **kwargs))
             res2.spec, res2.last_keep = res.spec, res.last_keep
             if time.perf_counter() - t_re < res.elapsed_seconds:
                 res = res2
@@ -307,5 +391,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         total_seconds=time.perf_counter() - t_start,
         dispatches=runtime.stats.dispatches, compiles=runtime.stats.compiles,
         straggler_events=straggler_events,
+        retries=retries,
+        repartitions=runtime.stats.repartitions - repartitions_start,
         overlap_seconds=runtime.stats.overlap_seconds - overlap_start,
         decisions=controller.decision_rows(decisions_mark))

@@ -22,6 +22,19 @@ Device-resident phase pipeline (DESIGN.md §4): a job can be dispatched
   calls ``block_until_ready``; the host keeps generating the next level's
   candidates while the job is in flight (``RuntimeStats.overlap_seconds``
   records that overlap).
+
+Cluster-scale meshes (DESIGN.md §11): the runtime accepts a true 2-D
+``(data, cand)`` mesh — transaction shards along ``data`` *and* candidate
+shards along ``cand`` — counted by the same single shard_map job: each
+device counts its candidate shard against its transaction shard, ``psum``
+reduces over ``data`` only, and the results stay sharded over ``cand``
+(the per-shard keep masks are packed to exact word boundaries so they
+concatenate into one global bitstream).  :meth:`MapReduceRuntime.repartition`
+rebuilds the mesh as a different ``(n_data, n_cand)`` split of the same
+devices between levels and re-scatters the retained database — the elastic
+re-layout the per-level cost-model decision drives — and
+:meth:`MapReduceRuntime.rescatter` re-places shards from the host copy (the
+shard-recovery half of the fault-tolerant retry protocol).
 """
 
 from __future__ import annotations
@@ -56,6 +69,8 @@ class RuntimeStats:
     fused_dispatches: int = 0   # jobs that filtered on device
     overlap_seconds: float = 0.0  # host gen time spent while a job was in flight
     bytes_to_host: int = 0      # result bytes actually fetched from device
+    repartitions: int = 0       # elastic mesh re-layouts (DESIGN.md §11)
+    scatter_seconds: float = 0.0  # host time spent (re-)placing the database
 
 
 def _pack_mask(keep: jax.Array) -> jax.Array:
@@ -113,10 +128,11 @@ class CountFuture:
             if self._fused:
                 packed = np.asarray(raw[0])
                 stats.bytes_to_host += packed.nbytes
-                if packed.dtype == np.uint32:      # bit-packed (replicated job)
-                    keep = _unpack_mask(packed, self._n)
-                else:                              # plain bool (cand-sharded)
-                    keep = packed[:self._n].astype(bool)
+                # always a bit-packed uint32 stream: candidate-sharded jobs
+                # pack per shard at exact word boundaries (rows padded to a
+                # multiple of 32·n_cand_shards), so the shard concatenation
+                # is the global bitstream
+                keep = _unpack_mask(packed, self._n)
                 counts = None
                 if self._with_counts:
                     c = np.asarray(raw[1])
@@ -131,21 +147,24 @@ class CountFuture:
 
 
 class MapReduceRuntime:
-    """Support-counting runtime over a 1-D (or larger) mesh.
+    """Support-counting runtime over a 1-D data mesh or a 2-D (data, cand) mesh.
 
     Args:
       mesh: a Mesh containing a ``data`` axis (other axes are unused here but
         allowed, so the production (data, model) mesh can be passed directly).
-        Defaults to a 1-D mesh over all local devices.
+        Defaults to a 1-D mesh over all local devices; pass
+        ``launch.mesh.make_mining_mesh(n_data, n_cand)`` for the 2-D
+        transaction×candidate decomposition (DESIGN.md §11).
       impl: counting implementation — any of ``IMPLS`` (popcount families
         "jnp"/"pallas"/"vertical*" plus their bit-plane "matmul" twins,
         DESIGN.md §10), or None/"auto": the cross-family autotune plan
-        winner for the database's shape bucket, resolved at
+        winner for the database's *per-shard* shape bucket, resolved at
         :meth:`scatter_db` time (static fallback when autotune is off or
         the plan is unavailable: "pallas" on TPU, "vertical" elsewhere).
       cand_axis: optional mesh axis name to additionally shard *candidates*
-        over (2-D decomposition; beyond-paper, see DESIGN.md). None replicates
-        candidates, matching the paper (every mapper holds the full trie).
+        over (2-D decomposition; beyond-paper, see DESIGN.md §11). None
+        replicates candidates, matching the paper (every mapper holds the
+        full trie).
       autotune: consult the block-size autotuner when building counting jobs
         (kernels/autotune.py); False pins the static defaults.
     """
@@ -162,6 +181,9 @@ class MapReduceRuntime:
             impl = "pallas" if jax.default_backend() == "tpu" else "vertical"
         if impl not in IMPLS:
             raise ValueError(f"unknown impl {impl!r}; options: {IMPLS}")
+        if cand_axis is not None and cand_axis not in mesh.shape:
+            raise ValueError(f"cand_axis {cand_axis!r} not in mesh axes "
+                             f"{tuple(mesh.shape)}")
         self.mesh = mesh
         self.impl = impl
         self.cand_axis = cand_axis
@@ -170,14 +192,32 @@ class MapReduceRuntime:
         self._shape_cache: set = set()
         self._jitted = {}
         self._n_items: int | None = None
+        self._db_masks: np.ndarray | None = None  # host copy for re-scatter
 
     @property
     def n_data_shards(self) -> int:
         return self.mesh.shape["data"]
 
     @property
+    def n_cand_shards(self) -> int:
+        return self.mesh.shape[self.cand_axis] if self.cand_axis else 1
+
+    @property
+    def mesh_split(self) -> tuple[int, int]:
+        """(n_data, n_cand) — the current transaction×candidate split."""
+        return (self.n_data_shards, self.n_cand_shards)
+
+    @property
     def vertical(self) -> bool:
         return self.impl.startswith("vertical")
+
+    @property
+    def can_repartition(self) -> bool:
+        """True when the mesh is runtime-owned (only data/cand-style axes)
+        and a database has been scattered, so :meth:`repartition` can
+        rebuild the split from the retained host copy."""
+        return (self._db_masks is not None
+                and set(self.mesh.axis_names) <= {"data", "cand", "model"})
 
     # -- data distribution ---------------------------------------------------
 
@@ -186,17 +226,30 @@ class MapReduceRuntime:
 
         Horizontal impls return the (N, W) row-sharded matrix; the vertical
         impl returns (d, I+1, Tw) per-shard item-major bitmaps (built host-side
-        once — the InputFormat step of the job)."""
+        once — the InputFormat step of the job).  The unpadded host copy is
+        retained for :meth:`repartition`/:meth:`rescatter`."""
+        self._db_masks = np.asarray(db_masks, dtype=np.uint32)
+        if n_items is not None:
+            self._n_items = n_items
+        return self._scatter_current()
+
+    def _scatter_current(self):
+        """(Re-)place the retained database on the current mesh."""
         from .bitset import vertical_pack
+        db_masks = self._db_masks
         n, w = db_masks.shape
-        if self._auto_impl and self.autotune and n_items is not None:
-            # cross-family plan winner at a representative per-phase shape
-            # (the cross-check that fixes tuned-but-slower static defaults,
-            # DESIGN.md §10); counts are bit-exact across impls, so the
-            # mining result is identical whichever family wins
+        t0 = time.perf_counter()
+        if self._auto_impl and self.autotune and self._n_items is not None:
+            # cross-family plan winner at a representative *per-shard* phase
+            # shape — each device counts C/n_cand candidates against
+            # T/n_data transactions, so the plan must bucket on the extents
+            # a shard actually sees, not the global ones (DESIGN.md §11);
+            # counts are bit-exact across impls, so the mining result is
+            # identical whichever family wins
             from repro.kernels.autotune import tuned_plan
-            rep_c = min(max(16 * n_items, 256), 4096)
-            plan = tuned_plan("count", C=rep_c, T=n, W=w, kmax=4)
+            rep_c = min(max(16 * self._n_items, 256), 4096)
+            plan = tuned_plan("count", C=max(rep_c // self.n_cand_shards, 32),
+                              T=max(n // self.n_data_shards, 1), W=w, kmax=4)
             if plan is not None and plan["impl"] in IMPLS:
                 self.impl = plan["impl"]
         d = self.n_data_shards
@@ -205,34 +258,77 @@ class MapReduceRuntime:
             db_masks = np.concatenate(
                 [db_masks, np.zeros((pad, w), np.uint32)], axis=0)
         if self.vertical:
-            assert n_items is not None, "vertical impl needs n_items"
-            self._n_items = n_items
+            assert self._n_items is not None, "vertical impl needs n_items"
             per = db_masks.shape[0] // d
             shards = np.stack([
-                vertical_pack(db_masks[i * per:(i + 1) * per], n_items)
+                vertical_pack(db_masks[i * per:(i + 1) * per], self._n_items)
                 for i in range(d)])                      # (d, I+1, Tw)
-            return jax.device_put(
+            out = jax.device_put(
                 shards, NamedSharding(self.mesh, P("data", None, None)))
-        return jax.device_put(
-            db_masks, NamedSharding(self.mesh, P("data", None)))
+        else:
+            out = jax.device_put(
+                db_masks, NamedSharding(self.mesh, P("data", None)))
+        self.stats.scatter_seconds += time.perf_counter() - t0
+        return out
+
+    def rescatter(self):
+        """Re-place shards from the host copy on the *same* mesh — the
+        recovery step of the per-phase retry protocol (a failed shard's
+        state is rebuilt from the retained database, the analogue of HDFS
+        re-reading an input split on task re-execution)."""
+        if self._db_masks is None:
+            raise RuntimeError("rescatter() requires a prior scatter_db()")
+        return self._scatter_current()
+
+    def repartition(self, n_data: int, n_cand: int = 1):
+        """Elastically re-layout as an ``(n_data, n_cand)`` split of the same
+        devices and re-scatter the retained database (DESIGN.md §11).
+
+        Candidate counts explode between Apriori levels (k=2→3 especially),
+        so the best split is per-level, not per-run: the cost-model
+        controller prices the next phase's (C, T) extents and calls this
+        between levels.  Compiled jobs are cached per (mesh, shape) key, so
+        returning to a previously used split never re-compiles.
+
+        Returns the new sharded database handle.
+        """
+        if not self.can_repartition:
+            raise RuntimeError(
+                "repartition() needs a scatter_db'd database and a "
+                "runtime-owned mesh (axes within data/cand/model)")
+        n_dev = self.mesh.size
+        if n_data * n_cand != n_dev:
+            raise ValueError(f"split {n_data}x{n_cand} != {n_dev} devices")
+        if (n_data, n_cand) != self.mesh_split:
+            self.mesh = make_mesh((n_data, n_cand), ("data", "cand"))
+            self.cand_axis = "cand" if n_cand > 1 else None
+            self.stats.repartitions += 1
+        return self._scatter_current()
 
     # -- one MapReduce job ----------------------------------------------------
 
     def _tuned(self, payload_shape, db_shape) -> dict:
-        """Autotuned block sizes for one counting job (static at trace time)."""
+        """Autotuned block sizes for one counting job (static at trace time).
+
+        Tuning keys bucket on *per-shard* extents — C/n_cand candidate rows
+        against this device's transaction shard — because that is the shape
+        the kernel actually runs at (DESIGN.md §11); the vertical db_shape is
+        already per-shard ((d, I+1, Tw_shard))."""
         from repro.kernels.autotune import DEFAULTS
+        dc = self.n_cand_shards
         if self.vertical:
             kind = self.impl[len("vertical"):].lstrip("_") or "jnp"
             impl_key = "vertical" if kind == "jnp" else f"vertical_{kind}"
             if not self.autotune:
                 return dict(DEFAULTS[impl_key])
             C, kmax = payload_shape
-            return tuned_blocks(impl_key, C=C, T=db_shape[-1],
+            return tuned_blocks(impl_key, C=max(C // dc, 1), T=db_shape[-1],
                                 W=db_shape[-2] // 32 + 1, kmax=kmax)
         if not self.autotune:
             return dict(DEFAULTS[self.impl])
         C, W = payload_shape
-        return tuned_blocks(self.impl, C=C, T=db_shape[0], W=W)
+        return tuned_blocks(self.impl, C=max(C // dc, 1),
+                            T=max(db_shape[0] // self.n_data_shards, 1), W=W)
 
     def _build(self, fused: bool, with_counts: bool, payload_shape, db_shape,
                n_valid: int | None = None):
@@ -260,13 +356,23 @@ class MapReduceRuntime:
             def mapper(db_local, payload_local, thr):
                 local = count_local(db_local, payload_local)  # map + combine
                 counts = jax.lax.psum(local, "data")          # reduce
-                if n_valid is not None:
-                    counts = counts[:n_valid]   # bucket-pad tail never leaves
-                keep = counts >= thr                          # filter, fused
-                # candidate-sharded jobs return a plain bool mask: per-shard
-                # bit-packing pads each shard to a word boundary, which does
-                # not concatenate into one contiguous global bitstream
-                mask = keep if cand_axis else _pack_mask(keep)
+                if cand_axis:
+                    # shard-symmetric n_valid: every shard keeps its full
+                    # (identical) row extent — rows padded to 32·n_cand —
+                    # and masks validity from its global row offset, so the
+                    # per-shard bit-packed masks land on exact word
+                    # boundaries and concatenate into the global bitstream
+                    keep = counts >= thr                      # filter, fused
+                    if n_valid is not None:
+                        per = counts.shape[0]
+                        base = jax.lax.axis_index(cand_axis) * per
+                        valid = base + jnp.arange(per, dtype=jnp.int32) < n_valid
+                        keep = keep & valid
+                else:
+                    if n_valid is not None:
+                        counts = counts[:n_valid]  # pad tail never leaves
+                    keep = counts >= thr                      # filter, fused
+                mask = _pack_mask(keep)
                 if with_counts:
                     return mask, jnp.where(keep, counts, 0)
                 return (mask,)
@@ -317,16 +423,26 @@ class MapReduceRuntime:
         count), so the bucket-pad tail never crosses to the host.
         """
         fused = min_count is not None
+        if self.cand_axis is not None:
+            # candidate-sharded jobs need rows divisible by the cand shards
+            # AND per-shard rows on a 32-row word boundary, so the fused
+            # per-shard keep masks bit-pack without intra-shard padding
+            mult = 32 * self.n_cand_shards
+            pad = (-cands_padded.shape[0]) % mult
+            if pad:
+                cands_padded = np.concatenate(
+                    [cands_padded,
+                     np.zeros((pad, cands_padded.shape[1]), np.uint32)])
         if self.vertical:
             payload = jnp.asarray(self._padded_indices(cands_padded))
         else:
             payload = jnp.asarray(cands_padded, dtype=jnp.uint32)
-        if not fused or self.cand_axis is not None:
-            # unfused keeps the legacy full-padded transfer; candidate-sharded
-            # jobs stay shard-symmetric (no per-shard slicing)
+        if not fused:
+            # unfused keeps the legacy full-padded transfer
             n_valid = None
         n_rows = int(cands_padded.shape[0]) if n_valid is None else int(n_valid)
-        key = (fused, with_counts, n_valid, db_sharded.shape, payload.shape)
+        key = (fused, with_counts, n_valid, db_sharded.shape, payload.shape,
+               tuple(self.mesh.shape.items()), self.cand_axis, self.impl)
         if key not in self._jitted:
             self._jitted[key] = self._build(fused, with_counts,
                                             payload.shape, db_sharded.shape,

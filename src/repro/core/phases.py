@@ -82,7 +82,8 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
               fused: bool = True, speculate: bool = False,
               spec: SpecJoin | None = None,
               prev_keep: np.ndarray | None = None,
-              gen_method: str = "prefix") -> PhaseResult:
+              gen_method: str = "prefix",
+              count_hook=None) -> PhaseResult:
     """Execute one (possibly multi-pass) MapReduce phase.
 
     Exactly one of ``npass`` (fixed width — SPC/FPC/VFPC style) or ``budget``
@@ -96,6 +97,10 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     ``prev_keep`` (its keep mask) turn this phase's first join into an exact
     pair-filter (candidates.SpecJoin.resolve).  ``gen_method`` selects the
     join algorithm ("prefix" grouped enumeration vs legacy "pairwise").
+    ``count_hook``, if given, is called as ``count_hook("count_dispatch", k)``
+    right after the counting job is dispatched — raising from it simulates a
+    lost shard mid-job, which the driver's retry protocol recovers from
+    (DESIGN.md §11).
 
     Returns a PhaseResult with per-level frequent itemsets.
     """
@@ -133,6 +138,8 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     fut = runtime.phase_count_async(db_sharded, padded,
                                     min_count=min_count if fused else None,
                                     n_valid=all_cands.shape[0])
+    if count_hook is not None:
+        count_hook("count_dispatch", k_prev + 1)
 
     # -- overlap window: speculative next-phase join while the job is in flight
     spec_next, t_spec, overlapped = None, 0.0, 0.0

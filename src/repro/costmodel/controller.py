@@ -12,10 +12,27 @@ primitives the stack needs:
 * :meth:`choose_width`   — predicted cost of ``w`` fused passes vs ``w``
   separate jobs → the ``measured`` pass-combining policy (the paper-faithful
   SPC…Optimized-ETDPC transcriptions stay untouched as baselines);
+* :meth:`choose_mesh`    — the elastic per-level repartitioning decision
+  (DESIGN.md §11): price the next fused phase's (C, T) extents under every
+  ``(n_data, n_cand)`` factorization of the device count and pick the
+  cheapest split, charging a measured re-scatter penalty (with hysteresis)
+  when it differs from the current one;
+* :meth:`should_rebalance` — price the LPT width-balance of the database
+  (static straggler mitigation) against its measured host cost: rebalance
+  only when the predicted per-shard work skew, integrated over the expected
+  counting jobs, exceeds what the re-pack costs;
 * :meth:`should_remine`  — predicted full-remine cost at the *current*
   window size vs accumulated delta-counting cost (StreamMiner);
 * :meth:`choose_fusion`  — serving micro-batch depth under a latency budget
   (RuleServeEngine / ServeEngine).
+
+Counting-job fits are calibrated in the **per-shard** ops basis: ``ops =
+count_job_ops(C/n_cand, T/n_data, W) + transfer`` — the work one device of
+the current mesh actually performs — so one fit prices alternative splits
+of the same job, which is what makes :meth:`choose_mesh` possible.
+Collective/serialization overheads of a split fold into the fit's intercept
+as soon as jobs on that mesh are observed (decayed window, so a re-layout
+re-calibrates within a few phases).
 
 Every decision is appended to :attr:`decisions` — what was predicted, what
 was chosen, and (once known) what was measured — the per-decision telemetry
@@ -27,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.roofline import count_job_ops
+from repro.roofline import XFER_OPS_PER_BYTE, count_job_ops
 
 from .measure import device_key
 from .model import CostModel, default_model
@@ -79,6 +96,8 @@ class CostController:
         self._count_impl = "default"
         self._count_txns = 1
         self._count_words = 1
+        self._count_data_shards = 1
+        self._count_cand_shards = 1
         self._last_spec_seconds: float | None = None
 
     # -- telemetry -------------------------------------------------------------
@@ -95,13 +114,18 @@ class CostController:
 
     # -- count jobs (mining phase loop) ----------------------------------------
 
-    def set_count_context(self, *, n_txns: int, n_words: int,
-                          impl: str) -> None:
+    def set_count_context(self, *, n_txns: int, n_words: int, impl: str,
+                          n_data_shards: int = 1,
+                          n_cand_shards: int = 1) -> None:
         """Pin the per-run constants of the counting-ops basis (DESIGN.md §9):
-        within one mine() run, job work varies only with candidate count."""
+        within one mine() run at a fixed mesh split, job work varies only
+        with candidate count.  The shard counts put observations in the
+        per-shard basis (DESIGN.md §11) — call again after a repartition."""
         self._count_txns = max(int(n_txns), 1)
         self._count_words = max(int(n_words), 1)
         self._count_impl = impl
+        self._count_data_shards = max(int(n_data_shards), 1)
+        self._count_cand_shards = max(int(n_cand_shards), 1)
 
     @property
     def count_key(self) -> str:
@@ -115,11 +139,33 @@ class CostController:
         return 4.125 * max(float(n_candidates), 1.0)
 
     def _count_ops(self, n_candidates: float,
-                   bytes_to_host: float | None = None) -> float:
+                   bytes_to_host: float | None = None,
+                   split: tuple[int, int] | None = None) -> float:
+        """Per-shard ops of one counting job on an ``(n_data, n_cand)`` mesh.
+
+        Compute is C/n_cand candidates against T/n_data transactions; the
+        device→host result transfer is global (it crosses the host boundary
+        once whatever the split).  Two transfer terms *do* depend on the
+        split — they are what makes equal-product factorizations price
+        differently in :meth:`choose_mesh` (raw compute C·T·W/devices is
+        split-invariant): the per-device candidate payload placement
+        (4·W·C/n_cand bytes: candidate sharding shrinks it, the lever that
+        favors all-cand when |C_k| explodes) and the psum over ``data``
+        (≈ 2·(n_data−1)/n_data ring-allreduce passes over the per-shard
+        result bytes: zero at n_data=1, the lever against wide data splits
+        on small jobs)."""
         if bytes_to_host is None:
             bytes_to_host = self.est_count_bytes(n_candidates)
-        return count_job_ops(max(int(n_candidates), 1), self._count_txns,
-                             self._count_words, bytes_to_host=bytes_to_host)
+        dd, dc = split if split is not None else (
+            self._count_data_shards, self._count_cand_shards)
+        dd, dc = max(dd, 1), max(dc, 1)
+        c_shard = max(int(math.ceil(max(n_candidates, 1) / dc)), 1)
+        t_shard = max(self._count_txns // dd, 1)
+        payload = 4.0 * self._count_words * c_shard
+        psum = 2.0 * (dd - 1) / dd * self.est_count_bytes(c_shard)
+        return count_job_ops(c_shard, t_shard, self._count_words,
+                             bytes_to_host=bytes_to_host) \
+            + XFER_OPS_PER_BYTE * (payload + psum)
 
     def observe_count(self, n_candidates: int, seconds: float,
                       bytes_to_host: float | None = None) -> None:
@@ -131,12 +177,13 @@ class CostController:
         self.model.observe(self.count_key,
                            self._count_ops(n_candidates, bytes_to_host),
                            seconds)
-        # realized time goes to the newest unmeasured width decision
-        for d in reversed(self.decisions):
-            if d.site == "pass_width":
-                if d.measured is None:
-                    d.measured = float(seconds)
-                break
+        # realized time goes to the newest unmeasured width/mesh decision
+        for site in ("pass_width", "mesh_split"):
+            for d in reversed(self.decisions):
+                if d.site == site:
+                    if d.measured is None:
+                        d.measured = float(seconds)
+                    break
 
     def predict_count(self, n_candidates: int,
                       bytes_to_host: float | None = None) -> float | None:
@@ -205,6 +252,109 @@ class CostController:
         # budget drivers also risk.
         alpha = (cum[best_w - 2] + cum[best_w - 1]) / (2.0 * c_next)
         return max(alpha, 1.0)
+
+    # -- elastic mesh repartitioning (drivers, DESIGN.md §11) ------------------
+
+    @property
+    def repartition_key(self) -> str:
+        return f"{self.device}/{self._count_impl}/scatter"
+
+    def observe_repartition(self, n_txns: int, n_words: int,
+                            seconds: float) -> None:
+        """Calibrate the re-layout penalty from one measured (re-)scatter —
+        host re-pack plus device placement, proportional to database bytes."""
+        self.model.observe(self.repartition_key,
+                           max(int(n_txns), 1) * max(int(n_words), 1), seconds)
+
+    def predict_repartition(self, n_txns: int, n_words: int) -> float | None:
+        return self.model.predict(self.repartition_key,
+                                  max(int(n_txns), 1) * max(int(n_words), 1))
+
+    def choose_mesh(self, est_candidates: int, *, n_devices: int,
+                    current: tuple[int, int] | None = None,
+                    hysteresis: float = 0.15) -> tuple[int, int] | None:
+        """Pick the ``(n_data, n_cand)`` split minimizing the next fused
+        phase's predicted cost (DESIGN.md §11).
+
+        Every factorization of ``n_devices`` is priced at the per-shard ops
+        the split would give this phase's (C, T) extents: all-data splits
+        divide the transaction work, all-cand splits divide the candidate
+        work (candidate counts explode between k=2 and k=3, so a static
+        split always loses one regime).  A split different from ``current``
+        is charged the measured re-scatter penalty and must beat the current
+        split by ``hysteresis`` (fractional) on top of it — re-layouts are
+        never free, so ping-ponging on noise is priced out.  Returns the
+        chosen split, or None when the model is uncalibrated (caller keeps
+        the current mesh).
+        """
+        if n_devices <= 1:
+            return None
+        coeffs = self.model.fit(self.count_key).coeffs()
+        if coeffs is None:
+            return None
+        a, b = coeffs
+        penalty = self.predict_repartition(self._count_txns,
+                                           self._count_words) or 0.0
+        predicted: dict = {}
+        best, best_t = None, float("inf")
+        cur_t = None
+        for dd in range(1, n_devices + 1):
+            if n_devices % dd:
+                continue
+            split = (dd, n_devices // dd)
+            t = a + b * self._count_ops(est_candidates, split=split)
+            predicted[f"{split[0]}x{split[1]}"] = t
+            if current is not None and split == current:
+                cur_t = t
+            elif current is not None:
+                t += penalty
+            if t < best_t:
+                best, best_t = split, t
+        if current is not None and best != current and cur_t is not None:
+            if best_t > (1.0 - hysteresis) * cur_t:
+                best, best_t = current, cur_t     # not worth the re-layout
+        self._record(Decision("mesh_split", self.count_key, predicted,
+                              f"{best[0]}x{best[1]}"))
+        return best
+
+    # -- LPT shard balance (drivers, DESIGN.md §11) ----------------------------
+
+    @property
+    def rebalance_key(self) -> str:
+        return f"{self.device}/host/rebalance"
+
+    def observe_rebalance(self, n_txns: int, seconds: float) -> None:
+        """Calibrate from one measured LPT width-balance re-pack."""
+        self.model.observe(self.rebalance_key, max(int(n_txns), 1), seconds)
+
+    def should_rebalance(self, shard_loads, *, est_candidates: int,
+                         est_jobs: int = 3) -> bool:
+        """Enable the static LPT width balance only when it pays for itself.
+
+        ``shard_loads`` are the per-shard total transaction widths an
+        unbalanced contiguous split would produce (the per-mapper work
+        proxy).  The predicted straggler waste is the skew fraction
+        ``max/mean − 1`` of one predicted counting job, integrated over
+        ``est_jobs`` expected jobs; the cost side is the calibrated host
+        re-pack time (a cheap O(N log N) estimate until first measured).
+        """
+        loads = [float(x) for x in shard_loads]
+        if len(loads) < 2 or sum(loads) <= 0:
+            return False
+        mean = sum(loads) / len(loads)
+        skew = max(loads) / mean - 1.0
+        t_job = self.predict_count(est_candidates)
+        if t_job is None:
+            return False                    # uncalibrated: keep the default
+        waste = skew * t_job * max(int(est_jobs), 1)
+        cost = self.model.predict(self.rebalance_key, self._count_txns)
+        if cost is None:
+            cost = 2e-8 * self._count_txns  # ~numpy argsort+take per row
+        fire = waste > cost
+        self._record(Decision("rebalance", self.rebalance_key,
+                              {"straggler_waste": waste, "rebalance": cost},
+                              fire))
+        return fire
 
     # -- speculative-join sizing (drivers) -------------------------------------
 

@@ -6,9 +6,11 @@ FIMI repository format the paper's datasets use).
 
 from __future__ import annotations
 
+import heapq
+
 import numpy as np
 
-from repro.core.bitset import pack_itemsets
+from repro.core.bitset import pack_itemsets, popcount_rows
 
 
 def save_transactions(path: str, transactions) -> None:
@@ -67,6 +69,60 @@ def balance_shards(transactions, n_shards: int) -> list[list[int]]:
             if pos < len(shards[s]):
                 out.append(transactions[shards[s][pos]])
     return out
+
+
+def _contiguous_shard_sizes(n: int, n_shards: int) -> list[int]:
+    """Real-row counts per shard of ``scatter_db``'s contiguous equal split:
+    rows are padded to the shard multiple at the *end*, so every shard holds
+    ``ceil(n/d)`` rows and only the tail shards see the zero padding."""
+    per = (n + (-n) % n_shards) // n_shards
+    return [max(0, min(per, n - s * per)) for s in range(n_shards)]
+
+
+def shard_width_loads(db_masks: np.ndarray, n_shards: int) -> np.ndarray:
+    """Per-shard total transaction width under the contiguous equal split
+    ``scatter_db`` produces — the straggler-skew input the cost controller
+    prices against the rebalance cost (DESIGN.md §11)."""
+    n = db_masks.shape[0]
+    if n_shards <= 1 or n == 0:
+        return np.array([float(popcount_rows(db_masks).sum())] if n else [0.0])
+    per = (n + (-n) % n_shards) // n_shards
+    w = popcount_rows(db_masks).astype(np.float64)
+    pad = per * n_shards - n
+    if pad:
+        w = np.concatenate([w, np.zeros(pad)])
+    return w.reshape(n_shards, per).sum(axis=1)
+
+
+def balance_masks(db_masks: np.ndarray, n_shards: int) -> np.ndarray:
+    """Reorder packed transactions so the *contiguous* equal split has
+    balanced per-shard total width (capacity-constrained LPT).
+
+    Unlike :func:`balance_shards` (which interleaves for a round-robin
+    split), this matches how ``MapReduceRuntime.scatter_db`` actually
+    shards: contiguous blocks of ``ceil(n/d)`` rows.  Each shard's capacity
+    is its real-row count under that split (the zero padding shrinks only
+    the tail shards), so the permutation is exact — counting is a sum over
+    transactions, so the mining result is bit-identical either way.
+    """
+    n = db_masks.shape[0]
+    if n_shards <= 1 or n <= n_shards:
+        return db_masks
+    caps = _contiguous_shard_sizes(n, n_shards)
+    widths = popcount_rows(db_masks).astype(np.int64)
+    order = np.argsort(-widths, kind="stable")
+    counts = [0] * n_shards
+    assign = np.empty(n, np.int32)
+    heap = [(0.0, s) for s in range(n_shards) if caps[s] > 0]
+    heapq.heapify(heap)
+    for i in order:
+        load, s = heapq.heappop(heap)   # least-loaded shard with room
+        assign[i] = s
+        counts[s] += 1
+        if counts[s] < caps[s]:
+            heapq.heappush(heap, (load + float(widths[i]), s))
+    perm = np.argsort(assign, kind="stable")
+    return db_masks[perm]
 
 
 def pack_dataset(transactions, n_items: int) -> np.ndarray:

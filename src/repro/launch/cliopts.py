@@ -70,3 +70,66 @@ def policy_kwargs_from_args(args: argparse.Namespace,
         if val is not None and kwarg in accepted:
             out[kwarg] = val
     return out
+
+
+def add_mesh_args(ap: argparse.ArgumentParser) -> None:
+    """Attach the uniform mesh / distributed-launch knob group (§11).
+
+    The same flags drive single-process multi-device runs (simulated via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and true
+    multi-host runs (every worker passes identical flags; the coordinator
+    triple may instead come from JAX_COORDINATOR_ADDRESS / JAX_NUM_PROCESSES
+    / JAX_PROCESS_ID env vars).
+    """
+    g = ap.add_argument_group(
+        "mesh / distributed",
+        "2-D (data, cand) mining mesh + elastic repartitioning "
+        "(DESIGN.md §11)")
+    g.add_argument("--n-data-shards", type=int, default=None,
+                   help="transaction shards (default: devices / cand shards)")
+    g.add_argument("--n-cand-shards", type=int, default=1,
+                   help="candidate shards (2-D decomposition; 1 replicates "
+                        "candidates as in the paper)")
+    g.add_argument("--no-elastic", action="store_true",
+                   help="pin the initial mesh split (skip per-level "
+                        "cost-model repartitioning)")
+    g.add_argument("--max-retries", type=int, default=2,
+                   help="per-phase counting-job retries after a shard "
+                        "failure (rescatter + re-dispatch)")
+    g.add_argument("--balance-shards", choices=("auto", "on", "off"),
+                   default="auto",
+                   help="LPT width-balance the transaction shards: 'auto' "
+                        "lets the cost model enable it when predicted "
+                        "straggler waste exceeds the re-pack cost")
+    g.add_argument("--coordinator", default=None,
+                   help="host:port of process 0 for jax.distributed "
+                        "multi-host init (unset = single-process)")
+    g.add_argument("--num-processes", type=int, default=None,
+                   help="total jax.distributed processes")
+    g.add_argument("--process-id", type=int, default=None,
+                   help="this worker's jax.distributed process index")
+
+
+def runtime_from_args(args: argparse.Namespace, impl: str | None = None):
+    """Build the (runtime, extra mine() kwargs) the mesh flags describe.
+
+    Calls :func:`repro.launch.mesh.init_distributed` first (no-op without a
+    coordinator), then lays the 2-D mining mesh over every device the
+    process can now see.
+    """
+    from repro.core.mapreduce import MapReduceRuntime
+    from repro.launch.mesh import init_distributed, make_mining_mesh
+
+    init_distributed(getattr(args, "coordinator", None),
+                     getattr(args, "num_processes", None),
+                     getattr(args, "process_id", None))
+    n_cand = getattr(args, "n_cand_shards", 1) or 1
+    mesh = make_mining_mesh(getattr(args, "n_data_shards", None), n_cand)
+    runtime = MapReduceRuntime(
+        mesh=mesh, impl=impl, cand_axis="cand" if n_cand > 1 else None)
+    balance = {"auto": None, "on": True, "off": False}[
+        getattr(args, "balance_shards", "auto")]
+    mine_kwargs = dict(elastic=not getattr(args, "no_elastic", False),
+                       max_retries=getattr(args, "max_retries", 2),
+                       balance_shards_by_width=balance)
+    return runtime, mine_kwargs

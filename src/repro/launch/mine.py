@@ -10,9 +10,10 @@ import argparse
 import json
 
 from repro.core import ALGORITHMS, mine
-from repro.core.mapreduce import IMPLS, MapReduceRuntime
+from repro.core.mapreduce import IMPLS
 from repro.data import dataset_by_name, load_transactions
-from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
+from repro.launch.cliopts import (add_mesh_args, add_policy_args,
+                                  policy_kwargs_from_args, runtime_from_args)
 
 
 def main():
@@ -31,6 +32,7 @@ def main():
                          "elsewhere)")
     ap.add_argument("--json-out", default=None)
     add_policy_args(ap)
+    add_mesh_args(ap)
     args = ap.parse_args()
 
     if args.input:
@@ -38,14 +40,18 @@ def main():
     else:
         txns, n_items = dataset_by_name(args.dataset, seed=args.seed,
                                         scale=args.scale)
-    runtime = MapReduceRuntime(impl=None if args.impl == "auto" else args.impl)
+    runtime, mesh_kwargs = runtime_from_args(
+        args, impl=None if args.impl == "auto" else args.impl)
     res = mine(txns, n_items=n_items, min_sup=args.min_sup,
                algorithm=args.algorithm, runtime=runtime,
                policy_kwargs=policy_kwargs_from_args(args, args.algorithm),
-               checkpoint_dir=args.checkpoint_dir)
+               checkpoint_dir=args.checkpoint_dir, **mesh_kwargs)
 
     print(f"algorithm={res.algorithm} min_sup={res.min_sup} "
           f"n_txns={res.n_txns} n_items={res.n_items}")
+    print(f"mesh={runtime.mesh_split[0]}x{runtime.mesh_split[1]} "
+          f"(data x cand) impl={runtime.impl} "
+          f"repartitions={res.repartitions} retries={res.retries}")
     print(f"phases={res.n_phases} dispatches={res.dispatches} "
           f"compiles={res.compiles} total={res.total_seconds:.2f}s")
     for ph in res.phases:

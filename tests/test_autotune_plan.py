@@ -20,6 +20,12 @@ def _fresh(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
     monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
     monkeypatch.setattr(at, "_memory_cache", {})
+    # the plan sweep prices candidates off the shared cost model; a
+    # calibrated per-machine cache (~/.cache/repro/costmodel.json) could
+    # prune scripted families, so isolate it too
+    import repro.costmodel.model as cm
+    monkeypatch.setenv("REPRO_COSTMODEL_CACHE", str(tmp_path / "cm.json"))
+    monkeypatch.setattr(cm, "_default", None)
 
 
 def _script_times(monkeypatch, times_us):

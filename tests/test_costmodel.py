@@ -235,6 +235,84 @@ def test_observe_count_backfills_decision_telemetry():
 
 
 # ---------------------------------------------------------------------------
+# CostController: elastic mesh + shard-balance decisions (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_choose_mesh_uncalibrated_or_single_device_is_none():
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=1000, n_words=4, impl="jnp")
+    assert ctl.choose_mesh(1000, n_devices=8) is None      # no fit yet
+    _calibrate_counts(ctl)
+    assert ctl.choose_mesh(1000, n_devices=1) is None      # nothing to split
+
+
+def test_choose_mesh_prefers_cand_split_when_candidates_explode():
+    # small T: the per-device candidate-payload + psum transfer terms
+    # dominate, so sharding candidates must win once |C| is large
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=2048, n_words=4, impl="jnp",
+                          n_data_shards=8, n_cand_shards=1)
+    _calibrate_counts(ctl, a=1e-3, b=1e-9,
+                      counts=(100, 400, 1600, 6400, 25600))
+    split = ctl.choose_mesh(10**6, n_devices=8, current=(8, 1))
+    assert split is not None and split[1] > 1, split
+    dec = ctl.decisions[-1]
+    assert dec.site == "mesh_split"
+    assert f"{split[0]}x{split[1]}" in dec.predicted
+    # every factorization of 8 was priced
+    assert set(dec.predicted) == {"1x8", "2x4", "4x2", "8x1"}
+
+
+def test_choose_mesh_hysteresis_keeps_current_split_on_small_jobs():
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=2048, n_words=4, impl="jnp",
+                          n_data_shards=8, n_cand_shards=1)
+    _calibrate_counts(ctl, a=1e-3, b=1e-9)
+    # tiny job: split costs are within the hysteresis band → stay put
+    assert ctl.choose_mesh(64, n_devices=8, current=(8, 1)) == (8, 1)
+
+
+def test_repartition_penalty_calibrates_and_prices_moves():
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=1000, n_words=4, impl="jnp")
+    assert ctl.predict_repartition(1000, 4) is None
+    ctl.observe_repartition(1000, 4, 0.02)
+    assert ctl.predict_repartition(1000, 4) == pytest.approx(0.02)
+    assert ctl.predict_repartition(2000, 4) == pytest.approx(0.04)
+
+
+def test_should_rebalance_prices_skew_against_repack_cost():
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=4096, n_words=4, impl="jnp")
+    # uncalibrated count fit: keep the default (never fire)
+    assert not ctl.should_rebalance([100.0, 900.0], est_candidates=1000)
+    _calibrate_counts(ctl, a=0.1, b=1e-9)   # expensive jobs
+    ctl.observe_rebalance(4096, 1e-4)       # cheap re-pack
+    assert ctl.should_rebalance([100.0, 900.0], est_candidates=1000)
+    assert ctl.decisions[-1].site == "rebalance"
+    # no skew → no waste → never worth the re-pack
+    assert not ctl.should_rebalance([500.0, 500.0], est_candidates=1000)
+    # skewed but the re-pack now costs more than the waste
+    ctl2 = _fresh_controller()
+    ctl2.set_count_context(n_txns=4096, n_words=4, impl="jnp")
+    _calibrate_counts(ctl2, a=1e-6, b=1e-12)  # cheap jobs
+    ctl2.observe_rebalance(4096, 10.0)        # pathological re-pack
+    assert not ctl2.should_rebalance([100.0, 900.0], est_candidates=1000)
+
+
+def test_count_ops_split_pricing_levers():
+    """The split-dependent ops terms behave as designed: candidate sharding
+    shrinks per-shard ops, and the psum term penalizes wide data splits."""
+    ctl = _fresh_controller()
+    ctl.set_count_context(n_txns=1024, n_words=4, impl="jnp")
+    base = ctl._count_ops(10**5, split=(1, 1))
+    assert ctl._count_ops(10**5, split=(1, 8)) < base
+    # equal-product splits price differently (cand split cheaper at big C)
+    assert (ctl._count_ops(10**5, split=(1, 8))
+            < ctl._count_ops(10**5, split=(8, 1)))
+
+
+# ---------------------------------------------------------------------------
 # CostController: remine + speculation + fusion primitives
 # ---------------------------------------------------------------------------
 

@@ -6,7 +6,8 @@ import numpy as np
 from repro.data import (chess_like, dataset_by_name, dataset_stats,
                         ibm_generator, load_transactions, mushroom_like,
                         save_transactions)
-from repro.data.loader import balance_shards
+from repro.core.bitset import pack_itemsets, popcount_rows
+from repro.data.loader import balance_masks, balance_shards, shard_width_loads
 from repro.data.tokens import TokenPipeline
 
 
@@ -83,6 +84,39 @@ def test_balance_shards_by_width():
         loads[i % n_shards] += len(t)
     assert loads.max() / loads.min() < 1.25          # LPT keeps shards even
     assert sorted(map(tuple, balanced)) == sorted(map(tuple, txns))
+
+
+def test_balance_masks_contiguous_split():
+    """balance_masks matches scatter_db's *contiguous* split (the round-robin
+    interleave of balance_shards never did): per-shard width loads even out,
+    rows are a pure permutation, and the uneven tail shard is respected."""
+    rng = np.random.default_rng(1)
+    txns = [list(range(rng.integers(1, 40))) for _ in range(203)]  # 203 % 8 != 0
+    masks = pack_itemsets(txns, 40)
+    n_shards = 8
+    skew_before = shard_width_loads(masks, n_shards)
+    balanced = balance_masks(masks, n_shards)
+    assert sorted(map(tuple, balanced.tolist())) == sorted(map(tuple, masks.tolist()))
+    loads = shard_width_loads(balanced, n_shards)
+    # the tail shard holds fewer real rows (203 → 26·7 + 21), so compare the
+    # equal-sized shards and check the tail is no heavier than they are
+    full = loads[:-1]
+    assert full.max() / full.min() < 1.25
+    assert loads[-1] <= full.max()
+    assert full.max() - full.min() <= skew_before.max() - skew_before.min()
+    # widths conserved
+    assert loads.sum() == popcount_rows(masks).sum()
+
+
+def test_shard_width_loads_matches_contiguous_slices():
+    rng = np.random.default_rng(2)
+    masks = pack_itemsets([list(range(rng.integers(1, 20)))
+                           for _ in range(30)], 20)
+    loads = shard_width_loads(masks, 4)
+    per = 8   # ceil(30/4) with end padding
+    expect = [popcount_rows(masks[i * per:(i + 1) * per]).sum()
+              for i in range(4)]
+    assert loads.tolist() == [float(x) for x in expect]
 
 
 def test_token_pipeline_shapes_and_determinism():

@@ -74,7 +74,7 @@ def test_readme_mentions_tracked_benchmarks():
     text = (ROOT / "README.md").read_text()
     for record in ("BENCH_exec_time.json", "BENCH_kernels.json",
                    "BENCH_rules.json", "BENCH_stream.json",
-                   "BENCH_costmodel.json"):
+                   "BENCH_costmodel.json", "BENCH_scaling.json"):
         assert record in text, f"README should cite {record} headline numbers"
         assert (ROOT / record).exists(), f"{record} missing from repo root"
 
@@ -83,7 +83,8 @@ def test_readme_mentions_tracked_benchmarks():
     "repro.launch.mine", "repro.launch.serve_rules", "repro.launch.stream",
     "repro.launch.report",
     "examples/quickstart.py", "examples/recommend.py",
-    "examples/stream_mine.py",
+    "examples/stream_mine.py", "examples/mine_distributed.py",
+    "benchmarks.bench_scaling",
 ])
 def test_quickstart_surfaces_in_readme(surface):
     """The documented entry points stay documented."""
@@ -102,6 +103,20 @@ def test_matmul_kernel_family_documented():
     for surface in ("junpack_bits", "tuned_plan", "count_kernel_roofline",
                     "count_winner", "XFER_OPS_PER_BYTE"):
         assert surface in design, f"DESIGN.md §10 must document {surface}"
+
+
+def test_cluster_mesh_documented():
+    """The §11 cluster-scale subsystem stays documented: the README
+    distributed quickstart, the DESIGN section, and its public surfaces."""
+    readme = (ROOT / "README.md").read_text()
+    assert "Distributed quickstart" in readme
+    for flag in ("--n-cand-shards", "--coordinator", "--balance-shards"):
+        assert flag in readme, f"README distributed quickstart must show {flag}"
+    assert 11 in _design_sections()
+    design = (ROOT / "DESIGN.md").read_text()
+    for surface in ("init_distributed", "make_mining_mesh", "choose_mesh",
+                    "should_rebalance", "balance_masks", "rescatter"):
+        assert surface in design, f"DESIGN.md §11 must document {surface}"
 
 
 def test_measured_policy_documented():

@@ -101,6 +101,36 @@ def test_checkpoint_mid_run_restart(tmp_path):
     assert res.itemsets() == oracle
 
 
+def test_retry_recovers_injected_failure():
+    """A counting job that raises (injected shard failure) is re-dispatched
+    after rescatter and the result stays bit-identical; exhausting
+    max_retries propagates the error (DESIGN.md §11)."""
+    rng = np.random.default_rng(7)
+    txns = [sorted(set(rng.integers(0, 24, rng.integers(2, 9)).tolist()))
+            for _ in range(150)]
+    oracle = sequential_apriori(txns, 0.2)
+    calls = {"n": 0}
+
+    def fail_once(event, k):
+        if event == "count_dispatch":
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("injected shard failure")
+
+    res = mine(txns, n_items=24, min_sup=0.2, algorithm="optimized_vfpc",
+               count_hook=fail_once)
+    assert res.retries == 1
+    assert res.itemsets() == oracle
+
+    def always_fail(event, k):
+        if event == "count_dispatch":
+            raise RuntimeError("dead shard")
+
+    with pytest.raises(RuntimeError, match="dead shard"):
+        mine(txns, n_items=24, min_sup=0.2, count_hook=always_fail,
+             max_retries=1)
+
+
 def test_runtime_stats_accumulate(dataset):
     txns, _ = dataset
     rt = MapReduceRuntime()

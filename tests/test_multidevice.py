@@ -183,6 +183,115 @@ def test_2d_candidate_decomposition_narrow_shards():
     assert "2D_NARROW_OK" in out
 
 
+def test_2d_mesh_parity_all_families():
+    """The runtime-owned (data, cand) mesh at both (4,2) and (2,4) splits,
+    across impl families including the matmul twins — every shape must be
+    bit-identical to the sequential oracle (DESIGN.md §11)."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import mine, sequential_apriori
+        from repro.core.mapreduce import MapReduceRuntime
+        from repro.compat import make_mesh
+        rng = np.random.default_rng(11)
+        base = rng.random((4, 24)) < 0.4
+        txns = []
+        for _ in range(160):
+            pat = base[rng.integers(4)]
+            row = np.where(rng.random(24) < 0.85, pat, rng.random(24) < 0.1)
+            txns.append(np.nonzero(row)[0].tolist() or [0])
+        oracle = sequential_apriori(txns, 0.25)
+        for split in [(4, 2), (2, 4)]:
+            for impl in ["jnp", "matmul", "vertical", "vertical_matmul"]:
+                mesh = make_mesh(split, ("data", "cand"))
+                rt = MapReduceRuntime(mesh=mesh, impl=impl, cand_axis="cand")
+                res = mine(txns, n_items=24, min_sup=0.25,
+                           algorithm="optimized_etdpc", runtime=rt,
+                           elastic=False)
+                assert res.itemsets() == oracle, (split, impl)
+        print("MESH2D_FAMILIES_OK")
+    """)
+    assert "MESH2D_FAMILIES_OK" in out
+
+
+def test_repartition_mid_mine_parity():
+    """Elastic repartitioning mid-mine: scripted choose_mesh walks the run
+    through (8,1) → (2,4) → (4,2) splits and results stay bit-identical,
+    with the re-layouts visible in MiningResult.repartitions."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import mine, sequential_apriori
+        from repro.core.mapreduce import MapReduceRuntime
+        from repro.costmodel import CostController
+        from repro.costmodel.model import CostModel
+        from repro.launch.mesh import make_mining_mesh
+        rng = np.random.default_rng(12)
+        base = rng.random((4, 24)) < 0.4
+        txns = []
+        for _ in range(200):
+            pat = base[rng.integers(4)]
+            row = np.where(rng.random(24) < 0.85, pat, rng.random(24) < 0.1)
+            txns.append(np.nonzero(row)[0].tolist() or [0])
+        oracle = sequential_apriori(txns, 0.25)
+        rt = MapReduceRuntime(mesh=make_mining_mesh(8, 1), impl="jnp")
+        ctl = CostController(model=CostModel(persist=False))
+        script = iter([(2, 4), (4, 2)])
+        ctl.choose_mesh = lambda *a, **k: next(script, None)
+        res = mine(txns, n_items=24, min_sup=0.25,
+                   algorithm="optimized_etdpc", runtime=rt,
+                   controller=ctl, elastic=True)
+        assert res.repartitions == 2, res.repartitions
+        assert rt.mesh_split == (4, 2)
+        assert res.itemsets() == oracle
+        print("REPARTITION_OK")
+    """)
+    assert "REPARTITION_OK" in out
+
+
+def test_retry_after_injected_failure():
+    """A counting job that dies mid-phase (injected via count_hook) is
+    recovered by rescatter + re-dispatch on the 2-D mesh, bit-identically."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import mine, sequential_apriori
+        from repro.core.mapreduce import MapReduceRuntime
+        from repro.launch.mesh import make_mining_mesh
+        rng = np.random.default_rng(13)
+        base = rng.random((4, 24)) < 0.4
+        txns = []
+        for _ in range(160):
+            pat = base[rng.integers(4)]
+            row = np.where(rng.random(24) < 0.85, pat, rng.random(24) < 0.1)
+            txns.append(np.nonzero(row)[0].tolist() or [0])
+        oracle = sequential_apriori(txns, 0.25)
+        calls = {"n": 0}
+        def fail_twice(event, k):
+            if event == "count_dispatch":
+                calls["n"] += 1
+                if calls["n"] in (2, 3):
+                    raise RuntimeError("injected shard failure")
+        rt = MapReduceRuntime(mesh=make_mining_mesh(4, 2), impl="jnp",
+                              cand_axis="cand")
+        res = mine(txns, n_items=24, min_sup=0.25,
+                   algorithm="optimized_etdpc", runtime=rt,
+                   elastic=False, count_hook=fail_twice)
+        assert res.retries == 2, res.retries
+        assert res.itemsets() == oracle
+        # beyond max_retries the failure propagates
+        calls["n"] = 0
+        def always_fail(event, k):
+            if event == "count_dispatch":
+                raise RuntimeError("dead shard")
+        try:
+            mine(txns, n_items=24, min_sup=0.25, runtime=rt,
+                 elastic=False, count_hook=always_fail, max_retries=1)
+            raise AssertionError("expected failure to propagate")
+        except RuntimeError as e:
+            assert "dead shard" in str(e)
+        print("RETRY_OK")
+    """)
+    assert "RETRY_OK" in out
+
+
 def test_balanced_shards_mining():
     """Width-balanced sharding (static straggler mitigation) keeps results exact."""
     out = run_py("""
