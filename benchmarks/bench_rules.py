@@ -1,11 +1,15 @@
-"""Rule subsystem benchmark (DESIGN.md §6/§7): vectorized rule generation
+"""Rule subsystem benchmark (DESIGN.md §6/§7/§12): vectorized rule generation
 throughput and RuleServeEngine query serving, policy-fused vs per-batch.
 
 Writes ``BENCH_rules.json``: rules/s for generation, queries/s and per-query
 p50/p99 dispatch latency for the ``per_batch`` (SPC policy, one queued batch
-per dispatch) and ``policy_fused`` (Optimized-VFPC micro-batching) arms, plus
-an interpret-mode bit-exactness check of the Pallas containment kernel —
-tracked across PRs by CI.
+per dispatch) and ``policy_fused`` (Optimized-VFPC micro-batching) arms, an
+interpret-mode bit-exactness check of the Pallas containment kernel, and the
+§12 ``open_loop`` arm — four tenants served through one packed arena under an
+open-loop arrival clock with SLO admission, swept across offered rates to the
+honest headline: **qps-at-p99-SLO** (the highest offered rate whose answered
+p99 meets the SLO with ≤1% shed), plus the shed rate the admission controller
+holds at overload — tracked across PRs by CI.
 """
 
 import time
@@ -15,14 +19,21 @@ import numpy as np
 
 from repro.core import generate_ruleset, mine
 from repro.core.rules import generate_rules
+from repro.costmodel import CostController
+from repro.costmodel.model import CostModel
 from repro.kernels.rule_match import rule_scores_jnp, rule_scores_pallas
 from repro.launch.serve_rules import make_queries
-from repro.serving import RuleServeEngine
+from repro.serving import OpenLoopServer, RuleServeEngine, RuleStore
 from repro.serving.common import latency_percentiles
 
 from .common import emit, write_json
 
 MIN_CONF = 0.6
+# four tenants = four rule catalogs cut from one mined result at different
+# confidence bars (different sizes, same item universe — tag bits isolate)
+TENANT_CONFS = (0.6, 0.65, 0.7, 0.8)
+SLO_MS = 25.0
+MAX_SHED = 0.01               # "sustained" = p99 in SLO with ≤1% shed
 
 
 def _serve_arm(rules, batches, algorithm, n_queries, warm_to):
@@ -94,6 +105,55 @@ def run(fast: bool = False):
     fused = record["serving"]["policy_fused"]["qps"]
     per_batch = record["serving"]["per_batch"]["qps"]
     record["serving"]["fused_speedup"] = round(fused / per_batch, 2)
+
+    # -- open loop: 4 tenants, one arena, qps-at-p99-SLO (DESIGN.md §12) ------
+    tenant_rules = {f"t{i}": generate_ruleset(res, min_confidence=c)
+                    for i, c in enumerate(TENANT_CONFS)}
+    store = RuleStore(tenants=tenant_rules)
+    controller = CostController(model=CostModel(persist=False))
+    eng = RuleServeEngine(store, top_k=5, algorithm="optimized_vfpc",
+                          controller=controller)
+    eng.warmup(32 * 4)
+    names = list(tenant_rules)
+    n_ol = 256 if fast else 1024
+    ol_queries = [(names[i % len(names)], q)
+                  for i, q in enumerate(make_queries(txns, n_ol, seed=2))]
+    rng = np.random.default_rng(3)
+
+    rates = (500, 1000, 2000) if fast else (500, 1000, 2000, 4000, 8000)
+    sweep, qps_at_slo, shed_at_max = [], 0.0, 0.0
+    for rate in rates:
+        srv = OpenLoopServer(eng, latency_slo_ms=SLO_MS, batch=32,
+                             max_wait_ms=5.0, cache_size=0,
+                             controller=controller)
+        gaps = rng.uniform(0.7, 1.3, n_ol) / rate
+        t = 0.0
+        for (tenant, q), gap in zip(ol_queries, gaps):
+            t += gap
+            srv.submit(q, t, tenant=tenant)
+        srv.flush()
+        s = srv.summary()
+        answered = s["served"] + s["cached"]
+        sustained = answered / max(srv.busy_until, t, 1e-9)
+        point = {"offered_qps": rate, "sustained_qps": round(sustained, 1),
+                 "p99_ms": round(s["p99_ms"], 3),
+                 "shed_rate": round(s["shed_rate"], 4)}
+        sweep.append(point)
+        shed_at_max = s["shed_rate"]
+        if s["p99_ms"] <= SLO_MS and s["shed_rate"] <= MAX_SHED:
+            qps_at_slo = max(qps_at_slo, sustained)
+    record["serving"]["open_loop"] = {
+        "n_tenants": len(tenant_rules),
+        "tenant_rules": {t: len(r) for t, r in tenant_rules.items()},
+        "latency_slo_ms": SLO_MS,
+        "rates": sweep,
+        "qps_at_slo": round(qps_at_slo, 1),
+        "shed_rate_at_max_offered": round(shed_at_max, 4),
+    }
+    rows.append((f"rules_serve/open_loop/tenants={len(tenant_rules)}",
+                 round(1e6 / max(qps_at_slo, 1e-9), 1),
+                 f"qps_at_p99_slo={qps_at_slo:,.0f} (slo={SLO_MS}ms) "
+                 f"shed_at_{rates[-1]}qps={shed_at_max:.1%}"))
 
     # -- Pallas containment kernel: interpret-mode bit-exactness --------------
     rng = np.random.default_rng(0)

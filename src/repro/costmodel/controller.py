@@ -432,6 +432,35 @@ class CostController:
                     d.measured = float(seconds)
                 break
 
+    def should_admit(self, *, work: float, latency_slo_s: float,
+                     backlog_s: float = 0.0,
+                     kind: str = "rule_serve") -> tuple[bool, Decision]:
+        """SLO admission for one serving query (DESIGN.md §12).
+
+        Predicted sojourn = queue backlog already committed to the device
+        (``backlog_s``, virtual busy time ahead of this query) plus the
+        calibrated dispatch-time prediction for ``work`` ops.  Admit iff the
+        sojourn fits ``latency_slo_s``.  Permissive when uncalibrated — with
+        no fit there is no honest prediction, and the first dispatches *are*
+        the calibration.  Returns ``(admit, decision)``; the decision is
+        recorded under site ``"admission"`` so ``report.py --decisions``
+        renders shed telemetry next to mining decisions, and the caller
+        backfills ``decision.measured`` with the realized latency.
+        """
+        key = self.serve_key(kind)
+        predicted = (self.model.predict(key, max(work, 1.0))
+                     if self.model.n_samples(key) else None)
+        if predicted is None:
+            dec = self._record(Decision(
+                "admission", key, {"slo": latency_slo_s}, True))
+            return True, dec
+        sojourn = float(backlog_s) + float(predicted)
+        admit = sojourn <= latency_slo_s
+        dec = self._record(Decision(
+            "admission", key,
+            {"sojourn": sojourn, "slo": latency_slo_s}, admit))
+        return admit, dec
+
     def choose_fusion(self, *, work_per_unit: float, queued: int,
                       max_fuse: int, latency_budget_s: float | None = None,
                       kind: str = "rule_serve") -> int | None:

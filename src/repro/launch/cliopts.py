@@ -72,6 +72,32 @@ def policy_kwargs_from_args(args: argparse.Namespace,
     return out
 
 
+def add_serving_args(ap: argparse.ArgumentParser) -> None:
+    """Attach the multi-tenant / SLO serving knob group (DESIGN.md §12)."""
+    g = ap.add_argument_group(
+        "multi-tenant serving",
+        "tenant registry, SLO admission and result caching (DESIGN.md §12)")
+    g.add_argument("--tenants", type=int, default=1,
+                   help="serve N tenants through one packed arena (the "
+                        "transaction stream is round-robin split and mined "
+                        "per tenant; 1 = single-tenant, PR 5 layout)")
+    g.add_argument("--rate-qps", type=float, default=None,
+                   help="open-loop mode: offer queries at this rate against "
+                        "a virtual arrival clock and report sustained "
+                        "qps / p99 / shed rate (unset = closed-loop replay)")
+    g.add_argument("--latency-slo-ms", type=float, default=None,
+                   help="admission target: shed queries whose predicted "
+                        "sojourn (backlog + dispatch) misses this SLO")
+    g.add_argument("--cache-size", type=int, default=256,
+                   help="LRU result-cache entries (0 disables caching)")
+    g.add_argument("--max-wait-ms", type=float, default=5.0,
+                   help="open-loop: dispatch a partial batch once its oldest "
+                        "query has waited this long")
+    g.add_argument("--no-fair-shedding", action="store_true",
+                   help="shed arrivals in order instead of displacing "
+                        "over-share tenants' queued queries")
+
+
 def add_mesh_args(ap: argparse.ArgumentParser) -> None:
     """Attach the uniform mesh / distributed-launch knob group (§11).
 

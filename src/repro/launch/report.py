@@ -127,12 +127,41 @@ def load_decisions(path) -> list:
     return doc.get("decisions", []) if isinstance(doc, dict) else doc
 
 
+def outcome_table(summary: dict) -> str:
+    """Admission-telemetry roll-up (``serving.outcome_summary`` dict): the
+    overall served/cached/shed split plus the per-tenant fairness view."""
+    lines = [
+        f"{summary.get('n_queries', 0)} queries: "
+        f"{summary.get('served', 0)} served, "
+        f"{summary.get('cached', 0)} cached, "
+        f"{summary.get('shed', 0)} shed "
+        f"(shed rate {summary.get('shed_rate', 0.0):.1%}, "
+        f"cache hit rate {summary.get('cache_hit_rate', 0.0):.1%}); "
+        f"answered p50 {summary.get('p50_ms', 0.0):.2f} ms / "
+        f"p99 {summary.get('p99_ms', 0.0):.2f} ms",
+        "", "| tenant | offered | answered | shed | shed rate |",
+        "|---|---|---|---|---|"]
+    for tenant, row in sorted((summary.get("tenants") or {}).items()):
+        rate = row["shed"] / row["offered"] if row["offered"] else 0.0
+        lines.append(f"| {tenant} | {row['offered']} | {row['answered']} | "
+                     f"{row['shed']} | {rate:.1%} |")
+    return "\n".join(lines)
+
+
 def report_decisions(path):
     rows = load_decisions(path)
     print(f"## Cost-model decisions ({path})\n")
     print(decision_summary(rows))
     print()
     print(decision_table(rows))
+    try:
+        doc = json.loads(open(path).read())
+    except ValueError:
+        doc = None
+    if isinstance(doc, dict) and doc.get("outcomes"):
+        print()
+        print("## Admission outcomes\n")
+        print(outcome_table(doc["outcomes"]))
 
 
 def main():

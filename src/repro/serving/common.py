@@ -49,3 +49,36 @@ def latency_percentiles(records) -> dict:
         return {"p50_ms": 0.0, "p99_ms": 0.0}
     return {"p50_ms": float(np.percentile(lat, 50)),
             "p99_ms": float(np.percentile(lat, 99))}
+
+
+def outcome_summary(outcomes) -> dict:
+    """Roll up open-loop :class:`~repro.serving.admission.QueryOutcome` rows.
+
+    Answered-query latency percentiles (served + cached — cache hits are real
+    answers at zero latency; shed queries got no answer so they don't get a
+    latency, they get a shed rate), overall shed/cache rates, and the
+    per-tenant admitted/shed split fairness assertions read.
+    """
+    n = len(outcomes)
+    served = [o for o in outcomes if o.outcome == "served"]
+    cached = [o for o in outcomes if o.outcome == "cached"]
+    shed = [o for o in outcomes if o.outcome == "shed"]
+    lat = np.asarray([o.latency_s * 1e3 for o in served + cached
+                      if o.latency_s is not None], np.float64)
+    tenants: dict = {}
+    for o in outcomes:
+        row = tenants.setdefault(o.tenant, {"offered": 0, "answered": 0,
+                                            "shed": 0})
+        row["offered"] += 1
+        row["shed" if o.outcome == "shed" else "answered"] += 1
+    return {
+        "n_queries": n,
+        "served": len(served),
+        "cached": len(cached),
+        "shed": len(shed),
+        "shed_rate": len(shed) / n if n else 0.0,
+        "cache_hit_rate": len(cached) / n if n else 0.0,
+        "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+        "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+        "tenants": tenants,
+    }

@@ -1,13 +1,13 @@
 """Batched association-rule serving — the mine → rules → serve endgame
-(DESIGN.md §7).
+(DESIGN.md §7, multi-tenant since §12).
 
 Incoming basket queries are bit-packed into transaction bitsets (§2) and
-matched against the :class:`~repro.core.rules.RuleSet`'s antecedents with the
-same word-parallel ``(c & t) == c`` containment test the counting kernels use
-— ``kernels/rule_match.py`` provides the Pallas variant and the blocked-jnp
-oracle, block sizes autotuned via ``kernels/autotune.py`` (§5).  Each dispatch
-emits the masked (Q, R) confidence·lift score matrix and reduces it with a
-device-side ``lax.top_k``; only the (Q, k) winners cross back to the host.
+matched against rule antecedents with the same word-parallel ``(c & t) == c``
+containment test the counting kernels use — ``kernels/rule_match.py`` provides
+the Pallas variant and the blocked-jnp oracle, block sizes autotuned via
+``kernels/autotune.py`` (§5).  Each dispatch emits the masked (Q, R)
+confidence·lift score matrix and reduces it with a device-side
+``lax.top_k``; only the (Q, k) winners cross back to the host.
 
 Micro-batching: queued query batches are fused per dispatch by the same
 pass-combining ``Policy`` objects the mining drivers and the LM
@@ -17,12 +17,22 @@ analogue of one counting job covering ``npass`` Apriori levels — candidate
 count |C| maps to rule·query pairs scored, |L| to queries answered.  The SPC
 policy reproduces strict per-batch dispatch (the "unfused" benchmark arm).
 
-Live rule refresh (DESIGN.md §8): everything derived from the RuleSet —
+Multi-tenant serving (DESIGN.md §12): the engine sits on a
+:class:`~repro.serving.rule_store.RuleStore` — a tenant registry of versioned
+RuleSets packed into one device-resident arena — so one fused dispatch serves
+*mixed-tenant* query batches; per-tenant tag bits in the packed baskets keep
+isolation inside the unchanged containment test.  Constructing the engine
+from a bare RuleSet wraps it in a single-tenant store (byte-identical to the
+PR 5 layout), and queries may be bare baskets (default tenant) or
+``(tenant, basket)`` pairs.
+
+Live rule refresh (DESIGN.md §8/§12): everything derived from the registry —
 device arrays, float64 metric columns, the per-shape jit cache — is bundled
-into one immutable :class:`_RuleState`, and :meth:`RuleServeEngine.swap_rules`
-replaces the whole bundle with a single reference assignment.  A serve call
-captures the state once, so in-flight queries never observe a half-swapped
-("torn") rule table; the next call sees the fresh rules.
+into one immutable :class:`~repro.serving.rule_store.ArenaState`, and
+:meth:`RuleServeEngine.swap_rules` replaces the whole bundle with a single
+reference assignment.  A serve call captures the state once, so in-flight
+queries never observe a half-swapped ("torn") rule table; the next call sees
+the fresh rules.
 """
 
 from __future__ import annotations
@@ -34,7 +44,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitset import n_words, unpack_itemsets
 from repro.core.policy import ALGORITHMS, PhaseStats
 from repro.core.rules import RuleSet
 from repro.kernels.autotune import DEFAULTS, tuned_blocks, tuned_plan
@@ -43,7 +52,8 @@ from repro.kernels.rule_match import (rule_scores_jnp, rule_scores_matmul,
                                       rule_scores_pallas)
 from repro.roofline import XFER_OPS_PER_BYTE
 
-from .common import MIN_QUERY_BUCKET, bucket_rows, pack_baskets
+from .common import MIN_QUERY_BUCKET, bucket_rows
+from .rule_store import DEFAULT_TENANT, ArenaState, RuleStore
 
 RULE_IMPLS = ("auto", "jnp", "pallas", "pallas_interpret", "matmul",
               "matmul_pallas", "matmul_pallas_interpret")
@@ -65,38 +75,32 @@ class RuleServeRecord:
     elapsed: float
 
 
-class _RuleState:
-    """Everything derived from one RuleSet, built eagerly so a reference swap
-    publishes a complete, internally consistent table."""
+def as_tenant_pairs(batch, tenant: str | None = None) -> list:
+    """Normalize one query batch to ``(tenant, basket)`` pairs.
 
-    def __init__(self, rules: RuleSet):
-        self.rules = rules
-        self.W = n_words(rules.n_items)
-        self.d_ante = jnp.asarray(rules.ante_masks)
-        self.d_cons = jnp.asarray(rules.cons_masks)
-        self.d_scores = jnp.asarray(rules.score, jnp.float32)
-        # host decode: exact float64 metrics (vectorized) + a lazy per-index
-        # consequent-tuple cache — only rules top_k actually surfaces pay the
-        # host bit-walk, never all R of them
-        self.cons_cache: dict[int, tuple] = {}
-        _, self.conf64, self.lift64, _ = rules.exact_metrics()
-        self.jitted: dict = {}
-
-    def __len__(self) -> int:
-        return self.rules.ante_masks.shape[0]
-
-    def cons_tuple(self, r: int) -> tuple:
-        if r not in self.cons_cache:
-            self.cons_cache[r] = unpack_itemsets(
-                self.rules.cons_masks[r:r + 1])[0]
-        return self.cons_cache[r]
+    ``tenant`` (when given) applies to every query; otherwise a 2-tuple whose
+    first element is a str is already a pair and a bare basket gets
+    :data:`DEFAULT_TENANT`.
+    """
+    if tenant is not None:
+        return [(tenant, basket) for basket in batch]
+    out = []
+    for q in batch:
+        if (isinstance(q, tuple) and len(q) == 2
+                and isinstance(q[0], str)):
+            out.append(q)
+        else:
+            out.append((DEFAULT_TENANT, q))
+    return out
 
 
 class RuleServeEngine:
     """Answer basket queries with top-k rule consequents by confidence·lift.
 
     Args:
-      rules: a RuleSet from ``core.rules.generate_ruleset``.
+      rules: a RuleSet from ``core.rules.generate_ruleset`` (wrapped in a
+        single-tenant :class:`RuleStore`), or a RuleStore for multi-tenant
+        serving through the packed arena (DESIGN.md §12).
       top_k: default number of recommendations per query.
       impl: one of ``RULE_IMPLS`` — the containment scoring path: popcount
         ("jnp"/"pallas") or bit-plane matmul ("matmul"/"matmul_pallas",
@@ -125,8 +129,8 @@ class RuleServeEngine:
         shares the process-wide model.
     """
 
-    def __init__(self, rules: RuleSet, *, top_k: int = 5, impl: str = "auto",
-                 algorithm: str = "optimized_vfpc",
+    def __init__(self, rules: RuleSet | RuleStore, *, top_k: int = 5,
+                 impl: str = "auto", algorithm: str = "optimized_vfpc",
                  policy_kwargs: dict | None = None, max_fuse: int = 16,
                  exclude_contained: bool = True,
                  dedup_consequents: bool = True, overfetch: int = 8,
@@ -165,16 +169,20 @@ class RuleServeEngine:
         # dispatch, so baseline runs calibrate the model the measured mode uses
         self.controller = controller
 
-        self._state = _RuleState(rules)
+        self.store = rules if isinstance(rules, RuleStore) else RuleStore(rules)
         self.records: list[RuleServeRecord] = []
 
     @property
     def rules(self) -> RuleSet:
-        return self._state.rules
+        return self.store.state.rules          # sole tenant (raises if many)
 
     @property
     def n_rules(self) -> int:
-        return len(self._state)
+        return len(self.store.state)
+
+    @property
+    def tenants(self) -> tuple:
+        return self.store.tenants
 
     @property
     def dispatches(self) -> int:
@@ -182,29 +190,33 @@ class RuleServeEngine:
 
     # -- live refresh ----------------------------------------------------------
 
-    def swap_rules(self, rules: RuleSet, warm_to: int | None = None) -> None:
-        """Atomically replace the served RuleSet (DESIGN.md §8).
+    def swap_rules(self, rules: RuleSet, warm_to: int | None = None,
+                   tenant: str | None = None) -> None:
+        """Atomically replace one tenant's served RuleSet (DESIGN.md §8/§12).
 
-        The complete successor state (device arrays, metric columns, empty jit
-        cache) is built first — optionally pre-compiled up to ``warm_to``
+        The complete successor arena (device arrays, metric columns, empty
+        jit cache) is built first — optionally pre-compiled up to ``warm_to``
         queries so the first post-swap dispatch pays no compile cost — and
-        then published with one reference assignment.  Serve calls capture the
-        state once, so a query stream never sees a torn table: each dispatch
-        is answered entirely by the old rules or entirely by the new ones.
+        then published with one reference assignment.  Serve calls capture
+        the state once, so a query stream never sees a torn table: each
+        dispatch is answered entirely by the old arena or entirely by the
+        new one.  ``tenant`` defaults to the sole registered tenant.
         """
-        state = _RuleState(rules)
-        if warm_to:
-            self._warm(state, warm_to, self.top_k)
-        self._state = state
+        if tenant is None:
+            names = self.store.tenants
+            tenant = names[0] if len(names) == 1 else DEFAULT_TENANT
+        warm = ((lambda state: self._warm(state, warm_to, self.top_k))
+                if warm_to else None)
+        self.store.swap_rules(tenant, rules, warm=warm)
 
     # -- jitted dispatch -------------------------------------------------------
 
-    def _blocks(self, state: _RuleState, impl_key: str, Qp: int) -> dict:
+    def _blocks(self, state: ArenaState, impl_key: str, Qp: int) -> dict:
         if not self.autotune:
             return dict(DEFAULTS[impl_key])
         return tuned_blocks(impl_key, C=max(len(state), 1), T=Qp, W=state.W)
 
-    def _resolve_impl(self, state: _RuleState, Qp: int) -> str:
+    def _resolve_impl(self, state: ArenaState, Qp: int) -> str:
         impl = self.impl
         if impl != "auto":
             return impl
@@ -214,7 +226,7 @@ class RuleServeEngine:
             return plan["impl"]
         return {"tpu": "pallas", "gpu": "matmul"}.get(self._backend, "jnp")
 
-    def _fn(self, state: _RuleState, Qp: int, k: int):
+    def _fn(self, state: ArenaState, Qp: int, k: int):
         key = (Qp, k)
         if key in state.jitted:
             return state.jitted[key]
@@ -249,7 +261,7 @@ class RuleServeEngine:
         state.jitted[key] = jax.jit(fn)
         return state.jitted[key]
 
-    def _dispatch(self, state: _RuleState, packed: np.ndarray, k: int):
+    def _dispatch(self, state: ArenaState, packed: np.ndarray, k: int):
         """(Q, W) packed baskets → host (Q, k) score values + rule indices."""
         Q = packed.shape[0]
         Qp = bucket_rows(Q)
@@ -259,7 +271,7 @@ class RuleServeEngine:
         vals, idx = self._fn(state, Qp, k)(jnp.asarray(packed))
         return np.asarray(vals)[:Q], np.asarray(idx)[:Q]
 
-    def _warm(self, state: _RuleState, max_queries: int,
+    def _warm(self, state: ArenaState, max_queries: int,
               top_k: int | None = None):
         k = max(min(self.top_k if top_k is None else top_k, len(state)), 0)
         if k == 0:
@@ -275,11 +287,11 @@ class RuleServeEngine:
     def warmup(self, max_queries: int, top_k: int | None = None):
         """Pre-compile every pow2 query bucket up to ``max_queries`` (and run
         the autotuner) so no dispatch in the serving loop pays compile cost."""
-        self._warm(self._state, max_queries, top_k)
+        self._warm(self.store.state, max_queries, top_k)
 
     # -- host driver -----------------------------------------------------------
 
-    def _decode(self, state: _RuleState, vals: np.ndarray, idx: np.ndarray,
+    def _decode(self, state: ArenaState, vals: np.ndarray, idx: np.ndarray,
                 k: int):
         dedup = self.dedup_consequents
         out = []
@@ -303,23 +315,27 @@ class RuleServeEngine:
             out.append(recs)
         return out
 
-    def serve(self, batches, top_k: int | None = None):
+    def serve(self, batches, top_k: int | None = None,
+              tenant: str | None = None):
         """Answer a queue of basket batches with policy-fused dispatches.
 
         Args:
-          batches: sequence of batches; each batch is a list of baskets
-            (iterables of item ids).
+          batches: sequence of batches; each batch is a list of queries — a
+            query is a basket (iterable of item ids, served under the
+            default tenant) or a ``(tenant, basket)`` pair; mixed-tenant
+            batches share one fused arena dispatch (DESIGN.md §12).
           top_k: recommendations per query (default: engine top_k).
+          tenant: serve every query under this tenant (overrides pairs).
 
         Returns ``(results, records)`` — ``results[b][q]`` is the list of
         :class:`Recommendation` for basket ``q`` of batch ``b``, and
         ``records`` the per-dispatch :class:`RuleServeRecord` trace (also kept
         on ``self.records``).
         """
-        state = self._state          # snapshot: one consistent table per call
+        state = self.store.state     # snapshot: one consistent table per call
         n_rules = len(state)
         k = max(min(self.top_k if top_k is None else top_k, n_rules), 0)
-        batches = list(batches)
+        batches = [as_tenant_pairs(b, tenant) for b in batches]
         results: list = []
         records: list[RuleServeRecord] = []
         history: list[PhaseStats] = []
@@ -357,14 +373,13 @@ class RuleServeEngine:
             nfuse = max(1, min(nfuse, self.max_fuse, len(batches) - i))
             group = batches[i:i + nfuse]
             sizes = [len(b) for b in group]
-            flat = [basket for batch in group for basket in batch]
+            flat = [pair for batch in group for pair in batch]
 
             t0 = time.perf_counter()
             if flat:
                 kf = (min(k * self.overfetch, n_rules)
                       if self.dedup_consequents else k)
-                vals, idx = self._dispatch(
-                    state, pack_baskets(flat, state.rules.n_items), kf)
+                vals, idx = self._dispatch(state, state.pack(flat), kf)
                 decoded = self._decode(state, vals, idx, k)
             else:
                 decoded = []
@@ -387,7 +402,9 @@ class RuleServeEngine:
         self.records = records
         return results, records
 
-    def query(self, baskets, top_k: int | None = None):
-        """Single-batch convenience: recommendations for one list of baskets."""
-        results, _ = self.serve([list(baskets)], top_k=top_k)
+    def query(self, baskets, top_k: int | None = None,
+              tenant: str | None = None):
+        """Single-batch convenience: recommendations for one list of baskets
+        (bare baskets or ``(tenant, basket)`` pairs)."""
+        results, _ = self.serve([list(baskets)], top_k=top_k, tenant=tenant)
         return results[0]

@@ -1,0 +1,98 @@
+"""Deterministic open-loop load generation for serving tests (DESIGN.md §12).
+
+Tier-1 latency/shedding assertions must be exact, so nothing here touches the
+wall clock: arrivals are synthetic timestamps from a seeded generator,
+dispatch costs are scripted functions, and the only "clock" is
+:class:`FakeClock` — virtual time that moves when the test says so.  The
+:class:`~repro.serving.admission.OpenLoopServer` consumes these directly
+(its latency math is closed over submitted timestamps + scripted costs), so
+a load test is a pure function of its seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import generate_ruleset, mine
+
+
+class FakeClock:
+    """Manually-advanced virtual clock (no sleeps, no wall time)."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+def make_ruleset(seed: int, n_items: int = 12, n_txns: int = 120,
+                 min_sup: float = 0.3, min_confidence: float = 0.6):
+    """Small mined RuleSet + realistic query baskets from a seeded synthetic
+    transaction stream (three overlapping base patterns plus noise — the
+    same generator shape the engine tests use)."""
+    rng = np.random.default_rng(seed)
+    base = rng.random((3, n_items)) < 0.5
+    txns = []
+    for _ in range(n_txns):
+        pat = base[rng.integers(3)]
+        row = np.where(rng.random(n_items) < 0.85, pat,
+                       rng.random(n_items) < 0.1)
+        txns.append(np.nonzero(row)[0].tolist() or [0])
+    res = mine(txns, n_items=n_items, min_sup=min_sup)
+    rules = generate_ruleset(res, min_confidence=min_confidence)
+    baskets = [sorted(set(t[:-1])) or [0] for t in txns]
+    return rules, baskets
+
+
+def arrivals(rate_qps: float, n: int, seed: int = 0,
+             jitter: float = 0.3) -> np.ndarray:
+    """``n`` non-decreasing arrival timestamps at mean ``rate_qps``.
+
+    Deterministic in the seed; ``jitter`` spreads the inter-arrival gaps
+    uniformly in ``[1∓jitter]/rate`` so batching sees realistic clumping
+    without a wall clock anywhere.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.uniform(1.0 - jitter, 1.0 + jitter, n) / float(rate_qps)
+    return np.cumsum(gaps)
+
+
+def tenant_mix(tenants, n: int, seed: int = 0, weights=None) -> list:
+    """Seeded tenant label per query (optionally skewed — fair-shedding
+    tests want one tenant hogging the stream)."""
+    rng = np.random.default_rng(seed)
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        p = w / w.sum()
+    else:
+        p = None
+    return [tenants[i] for i in rng.choice(len(tenants), n, p=p)]
+
+
+def constant_cost(seconds: float):
+    """Scripted dispatch-cost function: every dispatch takes ``seconds``."""
+    return lambda n_queries, work: float(seconds)
+
+
+def per_query_cost(seconds_each: float, overhead: float = 0.0):
+    """Scripted cost linear in dispatch size: ``overhead + n·seconds_each``
+    (affine like the cost model's own fits, so scripted calibration is
+    self-consistent)."""
+    return lambda n_queries, work: float(overhead + n_queries * seconds_each)
+
+
+def drive(server, baskets, times, tenants=None) -> None:
+    """Feed one pre-generated arrival schedule through an OpenLoopServer:
+    ``baskets[i]`` arrives at ``times[i]`` (under ``tenants[i]``), then the
+    queue is drained."""
+    for i, (b, t) in enumerate(zip(baskets, times)):
+        if tenants is None:
+            server.submit(b, float(t))
+        else:
+            server.submit(b, float(t), tenant=tenants[i])
+    server.flush()

@@ -119,6 +119,27 @@ def test_cluster_mesh_documented():
         assert surface in design, f"DESIGN.md §11 must document {surface}"
 
 
+def test_multi_tenant_serving_documented():
+    """The §12 multi-tenant serving layer stays documented: the README
+    quickstart flags + headline, the DESIGN section, and its public
+    surfaces."""
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--tenants", "--rate-qps", "--latency-slo-ms"):
+        assert flag in readme, f"README §12 quickstart must show {flag}"
+    for surface in ("RuleStore", "OpenLoopServer", "swap_rules",
+                    "qps", "tests/loadgen.py"):
+        assert surface in readme, f"README must document {surface}"
+    assert 12 in _design_sections()
+    design = (ROOT / "DESIGN.md").read_text()
+    for surface in ("RuleStore", "ArenaState", "should_admit",
+                    "OpenLoopServer", "swap_rules", "tag bit",
+                    "qps-at-p99-SLO", "dispatch_cost_fn"):
+        assert surface in design, f"DESIGN.md §12 must document {surface}"
+    bench = (ROOT / "BENCH_rules.json").read_text()
+    assert "open_loop" in bench and "qps_at_slo" in bench, \
+        "BENCH_rules.json must carry the §12 open-loop arm"
+
+
 def test_measured_policy_documented():
     """The cost-model subsystem's public surfaces stay documented: the
     `measured` algorithm row in the README table and the §9 architecture

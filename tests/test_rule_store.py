@@ -1,0 +1,239 @@
+"""RuleStore / multi-tenant arena (DESIGN.md §12): layout invariants,
+mixed-tenant ↔ per-tenant bit-identical equivalence (example-based + a
+hypothesis property across tenant counts, rule-set sizes and impl families),
+and swap atomicity under a concurrent writer (extends the PR 5 single-tenant
+atomicity test to multi-tenant mixed query streams)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from loadgen import make_ruleset
+from repro.core.bitset import WORD_BITS, n_words
+from repro.serving import DEFAULT_TENANT, RuleServeEngine, RuleStore
+
+# (seed, n_items, min_confidence) pool — mined once per module, reused by the
+# property test to vary tenant counts and rule-set sizes cheaply
+POOL_SPECS = [(7, 12, 0.6), (11, 9, 0.55), (23, 16, 0.7), (5, 12, 0.8)]
+
+
+@pytest.fixture(scope="module")
+def pool():
+    out = []
+    for seed, n_items, conf in POOL_SPECS:
+        rules, baskets = make_ruleset(seed, n_items=n_items,
+                                      min_confidence=conf)
+        assert len(rules) > 0
+        out.append((rules, baskets))
+    return out
+
+
+def recs_key(recs):
+    """Bit-identity projection of one query's recommendations."""
+    return [(r.consequent, r.confidence, r.lift, np.float32(r.score))
+            for r in recs]
+
+
+# -- arena layout --------------------------------------------------------------
+
+
+def test_single_tenant_layout_matches_pr5(pool):
+    """One tenant ⇒ no tag bits: the arena is byte-identical to the
+    RuleSet's own packed masks (zero-overhead generalization)."""
+    rules, _ = pool[0]
+    state = RuleStore(rules).state
+    assert state.tagged is False
+    assert state.n_items == rules.n_items
+    assert state.W == rules.ante_masks.shape[1]
+    np.testing.assert_array_equal(state.ante_masks, rules.ante_masks)
+    np.testing.assert_array_equal(state.cons_masks, rules.cons_masks)
+    assert state.slots[DEFAULT_TENANT] is None
+    assert tuple(state.tenants) == (DEFAULT_TENANT,)
+
+
+def test_multi_tenant_layout(pool):
+    (ra, _), (rb, _) = pool[0], pool[1]
+    store = RuleStore(tenants={"A": ra, "B": rb})
+    state = store.state
+    assert state.tagged and len(state) == len(ra) + len(rb)
+    base = max(ra.n_items, rb.n_items)
+    assert state.n_items_base == base
+    assert state.n_items == base + 2
+    assert state.W == n_words(base + 2)
+    assert state.offsets == {"A": 0, "B": len(ra)}
+    np.testing.assert_array_equal(
+        state.tenant_ids, [0] * len(ra) + [1] * len(rb))
+    # every antecedent row carries exactly its tenant's tag bit
+    for tenant, rules in (("A", ra), ("B", rb)):
+        slot = state.slots[tenant]
+        off = state.offsets[tenant]
+        word, bit = slot // WORD_BITS, np.uint32(1 << (slot % WORD_BITS))
+        rows = state.ante_masks[off:off + len(rules)]
+        assert ((rows[:, word] & bit) != 0).all()
+        other = state.slots["B" if tenant == "A" else "A"]
+        ow, ob = other // WORD_BITS, np.uint32(1 << (other % WORD_BITS))
+        assert ((rows[:, ow] & ob) == 0).all()
+        # consequent masks carry no tag bits (host decode untouched)
+        cons = state.cons_masks[off:off + len(rules)]
+        w_t = rules.cons_masks.shape[1]
+        np.testing.assert_array_equal(cons[:, :w_t], rules.cons_masks)
+        assert (cons[:, w_t:] == 0).all()
+
+
+def test_pack_tags_and_clips(pool):
+    (ra, _), (rb, _) = pool[0], pool[1]   # rb has fewer items (9 < 12)
+    store = RuleStore(tenants={"A": ra, "B": rb})
+    state = store.state
+    # item 10 is valid for A (12 items) but out of B's 9-item catalog
+    packed = state.pack([("A", [1, 10]), ("B", [1, 10])])
+    sa, sb = state.slots["A"], state.slots["B"]
+    row_a, row_b = packed[0], packed[1]
+    assert row_a[10 // WORD_BITS] & np.uint32(1 << (10 % WORD_BITS))
+    assert not (row_b[10 // WORD_BITS] & np.uint32(1 << (10 % WORD_BITS)))
+    assert row_a[sa // WORD_BITS] & np.uint32(1 << (sa % WORD_BITS))
+    assert row_b[sb // WORD_BITS] & np.uint32(1 << (sb % WORD_BITS))
+    assert not (row_a[sb // WORD_BITS] & np.uint32(1 << (sb % WORD_BITS)))
+    with pytest.raises(KeyError):
+        state.pack([("nobody", [1])])
+
+
+def test_store_requires_exactly_one_init_form(pool):
+    rules, _ = pool[0]
+    with pytest.raises(ValueError):
+        RuleStore()
+    with pytest.raises(ValueError):
+        RuleStore(rules, tenants={"A": rules})
+    with pytest.raises(ValueError):
+        RuleStore(tenants={"A": rules, "B": rules}).state.rules
+
+
+# -- mixed-tenant ↔ per-tenant equivalence -------------------------------------
+
+
+def _mixed_vs_single(pool_slice, impl, n_queries=12, top_k=3,
+                     dedup=True):
+    tenants = {f"t{i}": rules for i, (rules, _) in enumerate(pool_slice)}
+    engines = {f"t{i}": RuleServeEngine(rules, impl=impl, top_k=top_k,
+                                        dedup_consequents=dedup,
+                                        autotune=False)
+               for i, (rules, _) in enumerate(pool_slice)}
+    eng = RuleServeEngine(RuleStore(tenants=tenants), impl=impl,
+                          top_k=top_k, dedup_consequents=dedup,
+                          autotune=False)
+    # interleave tenants inside one batch so the fused dispatch is mixed
+    mixed, want = [], []
+    for q in range(n_queries):
+        name = f"t{q % len(pool_slice)}"
+        basket = pool_slice[q % len(pool_slice)][1][q % 40]
+        mixed.append((name, basket))
+        want.append(recs_key(engines[name].query([basket])[0]))
+    got = [recs_key(r) for r in eng.query(mixed)]
+    assert got == want
+
+
+@pytest.mark.parametrize("impl", ["jnp", "matmul", "pallas_interpret"])
+def test_mixed_equals_per_tenant(pool, impl):
+    _mixed_vs_single(pool[:3], impl)
+
+
+def test_mixed_equals_per_tenant_no_dedup(pool):
+    _mixed_vs_single(pool[:2], "jnp", dedup=False, top_k=5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data())
+def test_property_mixed_equals_per_tenant(pool, data):
+    """Across random tenant subsets (with repeats ⇒ different sizes), query
+    mixes, top-k and impl families: serving through the packed arena is
+    bit-identical to one engine per tenant."""
+    n_tenants = data.draw(st.integers(1, 4), label="n_tenants")
+    picks = data.draw(st.lists(st.integers(0, len(pool) - 1),
+                               min_size=n_tenants, max_size=n_tenants),
+                      label="rulesets")
+    impl = data.draw(st.sampled_from(["jnp", "matmul", "pallas_interpret"]),
+                     label="impl")
+    top_k = data.draw(st.integers(1, 6), label="top_k")
+    qidx = data.draw(st.lists(st.integers(0, 39), min_size=1, max_size=10),
+                     label="queries")
+
+    slice_ = [pool[i] for i in picks]
+    tenants = {f"t{i}": rules for i, (rules, _) in enumerate(slice_)}
+    eng = RuleServeEngine(RuleStore(tenants=tenants), impl=impl,
+                          top_k=top_k, autotune=False)
+    singles = {f"t{i}": RuleServeEngine(rules, impl=impl, top_k=top_k,
+                                        autotune=False)
+               for i, (rules, _) in enumerate(slice_)}
+    mixed, want = [], []
+    for j, q in enumerate(qidx):
+        name = f"t{j % len(slice_)}"
+        basket = slice_[j % len(slice_)][1][q]
+        mixed.append((name, basket))
+        want.append(recs_key(singles[name].query([basket])[0]))
+    got = [recs_key(r) for r in eng.query(mixed)]
+    assert got == want
+
+
+# -- swap atomicity under concurrency ------------------------------------------
+
+
+def test_multi_tenant_swap_is_atomic(pool):
+    """Writer hammers swap_rules("A") between two RuleSets while a reader
+    serves mixed-tenant batches: every answer for A matches *exactly* one of
+    the two sets' single-engine answers (never a torn mixture), and B's
+    answers are never disturbed."""
+    (ra1, baskets_a), (rb, baskets_b), (ra2, _) = pool[0], pool[1], pool[2]
+    store = RuleStore(tenants={"A": ra1, "B": rb})
+    eng = RuleServeEngine(store, impl="jnp", top_k=3, autotune=False)
+
+    qa = [baskets_a[i] for i in range(6)]
+    qb = [baskets_b[i] for i in range(6)]
+    want_a = {}
+    for tag, rules in (("v1", ra1), ("v2", ra2)):
+        single = RuleServeEngine(rules, impl="jnp", top_k=3, autotune=False)
+        want_a[tag] = [recs_key(r) for r in single.query(qa)]
+    want_b = [recs_key(r)
+              for r in RuleServeEngine(rb, impl="jnp", top_k=3,
+                                       autotune=False).query(qb)]
+    mixed = [p for ab in zip([("A", b) for b in qa],
+                             [("B", b) for b in qb]) for p in ab]
+
+    n_swaps = 6
+    errors = []
+
+    def writer():
+        try:
+            for i in range(n_swaps):
+                store.swap_rules("A", ra2 if i % 2 == 0 else ra1)
+        except Exception as e:             # pragma: no cover
+            errors.append(e)
+
+    wt = threading.Thread(target=writer)
+    wt.start()
+    for _ in range(12):
+        got = [recs_key(r) for r in eng.query(mixed)]
+        got_a, got_b = got[0::2], got[1::2]
+        # the whole batch came from ONE consistent arena snapshot
+        assert got_a in (want_a["v1"], want_a["v2"])
+        assert got_b == want_b
+    wt.join()
+    assert not errors
+    assert store.version("A") == n_swaps
+    assert store.version("B") == 0
+    final = [recs_key(r) for r in eng.query(mixed)][0::2]
+    assert final == want_a["v1" if n_swaps % 2 == 0 else "v2"]
+
+
+def test_swap_registers_new_tenant(pool):
+    (ra, baskets_a), (rb, baskets_b) = pool[0], pool[1]
+    store = RuleStore(tenants={"A": ra})
+    eng = RuleServeEngine(store, impl="jnp", top_k=3, autotune=False)
+    before = [recs_key(r) for r in eng.query([("A", baskets_a[0])])]
+    store.swap_rules("B", rb)            # registration bumps to tagged arena
+    assert store.version("B") == 0 and store.state.tagged
+    after = [recs_key(r) for r in eng.query([("A", baskets_a[0]),
+                                             ("B", baskets_b[0])])]
+    assert after[0] == before[0]         # A's answers survive the re-layout
+    single_b = RuleServeEngine(rb, impl="jnp", top_k=3, autotune=False)
+    assert after[1] == recs_key(single_b.query([baskets_b[0]])[0])
