@@ -23,9 +23,12 @@ import time
 
 import numpy as np
 
+from repro.obs.metrics import get_registry
+from repro.obs.trace import current_tracer
+
 from .bitset import pack_itemsets, singleton_masks, unpack_itemsets
 from .mapreduce import MapReduceRuntime
-from .phases import PhaseResult, bucket_pad, run_phase
+from .phases import PhaseResult, bucket_pad, count_roofline_attrs, run_phase
 from .policy import ALGORITHMS, MeasuredPolicy, PhaseStats
 
 # speculate on the next phase's join only when the current level kept at least
@@ -192,13 +195,19 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         # under the contiguous split (the paper's InputSplit concern, §5.2)
         from repro.data.loader import balance_masks
         t_bal = time.perf_counter()
-        db_masks = balance_masks(db_masks, runtime.n_data_shards)
+        with current_tracer().span("mine.rebalance", n_txns=n_txns,
+                                   n_shards=runtime.n_data_shards):
+            db_masks = balance_masks(db_masks, runtime.n_data_shards)
         controller.observe_rebalance(n_txns, time.perf_counter() - t_bal)
 
+    tracer = current_tracer()
     t_start = time.perf_counter()
+    run_span = tracer.span("mine.run", algorithm=algorithm, n_txns=n_txns,
+                           n_items=n_items, min_sup=min_sup)
     overlap_start = runtime.stats.overlap_seconds
     repartitions_start = runtime.stats.repartitions
-    db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
+    with tracer.span("mine.scatter", n_txns=n_txns, n_words=n_words):
+        db_sharded = runtime.scatter_db(db_masks, n_items=n_items)
     # re-pin: an "auto" runtime may have switched impl at scatter time
     controller.set_count_context(n_txns=n_txns, n_words=n_words,
                                  impl=runtime.impl,
@@ -259,14 +268,29 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         t0 = time.perf_counter()
         bytes0 = runtime.stats.bytes_to_host
         singles = singleton_masks(n_items)
+        job1_span = tracer.span("mine.phase", k_start=1, npass=1)
 
         def _job1():
-            fut = runtime.phase_count_async(
-                db_sharded, bucket_pad(singles),
-                min_count=min_count if pipeline else None, n_valid=n_items)
-            if count_hook is not None:
-                count_hook("count_dispatch", 1)
-            res = fut.result()
+            padded = bucket_pad(singles)
+            t_c = time.perf_counter()
+            cspan = tracer.span(
+                "mine.count", k_start=1, npass=1, n_candidates=n_items,
+                padded=int(padded.shape[0]), impl=runtime.impl, fused=pipeline)
+            try:
+                fut = runtime.phase_count_async(
+                    db_sharded, padded,
+                    min_count=min_count if pipeline else None, n_valid=n_items)
+                cspan.event("count.dispatch")
+                if count_hook is not None:
+                    count_hook("count_dispatch", 1)
+                res = fut.result()
+            finally:
+                t_el = time.perf_counter() - t_c
+                if tracer.enabled:
+                    cspan.set(count_seconds=t_el, **count_roofline_attrs(
+                        runtime, int(padded.shape[0]), n_txns, n_words,
+                        1, t_el))
+                cspan.close()
             return res if pipeline else res[:n_items]
 
         if pipeline:
@@ -276,6 +300,8 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
             keep = counts >= min_count
         levels[1] = (singles[keep], counts[keep])
         el = time.perf_counter() - t0
+        job1_span.set(elapsed_seconds=el, n_candidates=n_items,
+                      n_frequent=int(keep.sum())).close()
         phases.append(PhaseResult(1, 1, [n_items], 0.0, el, el,
                                   [int(keep.sum())], {1: levels[1]}, True))
         history.append((n_items, int(keep.sum()), el))
@@ -295,6 +321,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
                      if history and history[-1][0] else 0.0)
     while k_prev in levels and levels[k_prev][0].shape[0] > 0 and k_prev < max_k:
         prev_frequent = levels[k_prev][0]
+        ph_span = tracer.span("mine.phase", k_start=k_prev + 1)
         mode, val = policy.decide(_stats(len(history) - 1), _stats(len(history) - 2))
         kwargs = {}
         if mode == "width":
@@ -316,7 +343,9 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
                                            current=runtime.mesh_split)
             if split is not None and split != runtime.mesh_split:
                 t_rp = time.perf_counter()
-                db_sharded = runtime.repartition(*split)
+                with tracer.span("mine.repartition",
+                                 n_data=split[0], n_cand=split[1]):
+                    db_sharded = runtime.repartition(*split)
                 controller.observe_repartition(
                     n_txns, n_words, time.perf_counter() - t_rp)
                 controller.set_count_context(
@@ -341,6 +370,8 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         # Straggler mitigation: re-dispatch a pathologically slow counting job.
         if count_times and res.count_seconds > spec_factor * float(np.median(count_times)):
             straggler_events += 1
+            ph_span.event("straggler.redispatch",
+                          count_seconds=res.count_seconds)
             t_re = time.perf_counter()
             # no speculation on the re-dispatch: the first run already did (and
             # counted) it, and a second join would double-book overlap_seconds
@@ -355,6 +386,7 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
         count_times.append(res.count_seconds)
 
         if res.npass == 0:     # no candidates could be generated → done
+            ph_span.set(npass=0).close()
             break
         # calibrate on the phase's full cost (minus the speculative join that
         # belongs to the next phase) — the intercept must capture generation
@@ -382,13 +414,23 @@ def mine(transactions=None, *, db_masks: np.ndarray | None = None,
                          else 0.0)
         if checkpoint_dir:
             _save_ckpt(checkpoint_dir, algorithm, min_sup, levels, history, k_prev)
+        ph_span.set(npass=res.npass,
+                    n_candidates=sum(res.candidate_counts),
+                    n_frequent=res.frequent_counts[-1],
+                    elapsed_seconds=res.elapsed_seconds,
+                    overlap_seconds=res.overlap_seconds).close()
 
     # drop trailing empty levels
     levels = {k: v for k, v in levels.items() if v[0].shape[0] > 0}
+    total_seconds = time.perf_counter() - t_start
+    run_span.set(total_seconds=total_seconds, phases=len(phases),
+                 dispatches=runtime.stats.dispatches,
+                 impl=runtime.impl).close()
+    get_registry().gauge("mine.total_seconds").set(total_seconds)
     return MiningResult(
         algorithm=algorithm, min_sup=min_sup, n_txns=n_txns, n_items=n_items,
         levels=levels, phases=phases,
-        total_seconds=time.perf_counter() - t_start,
+        total_seconds=total_seconds,
         dispatches=runtime.stats.dispatches, compiles=runtime.stats.compiles,
         straggler_events=straggler_events,
         retries=retries,

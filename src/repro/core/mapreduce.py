@@ -50,6 +50,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 from repro.kernels.autotune import tuned_blocks
+from repro.obs.metrics import get_registry
 
 from .counting import local_counts, local_counts_vertical
 from .bitset import popcount_rows
@@ -71,6 +72,18 @@ class RuntimeStats:
     bytes_to_host: int = 0      # result bytes actually fetched from device
     repartitions: int = 0       # elastic mesh re-layouts (DESIGN.md §11)
     scatter_seconds: float = 0.0  # host time spent (re-)placing the database
+
+    def __setattr__(self, name, value):
+        # Mirror every increment into the process-wide metrics registry
+        # (DESIGN.md §13) so `--metrics-out` snapshots see runtime counters
+        # without touching the `stats.x += n` call sites.  Positive deltas
+        # only: per-runtime stats reset, the registry accumulates.
+        prev = getattr(self, name, None)
+        if prev is not None:
+            delta = value - prev
+            if delta > 0:
+                get_registry().counter(f"mine.{name}").inc(delta)
+        object.__setattr__(self, name, value)
 
 
 def _pack_mask(keep: jax.Array) -> jax.Array:

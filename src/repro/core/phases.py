@@ -29,11 +29,45 @@ import time
 
 import numpy as np
 
+from repro.obs.trace import current_tracer
+
 from .candidates import (SpecJoin, apriori_gen, non_apriori_gen, prune,
                          speculative_join)
 from .mapreduce import MapReduceRuntime
 
 MIN_BUCKET = 256
+
+
+def _impl_family(impl: str) -> str:
+    """Map a runtime impl name to its roofline kernel family."""
+    if "matmul" in impl:
+        return "matmul"
+    if impl.startswith("vertical"):
+        return "vertical"
+    return "horizontal"
+
+
+def count_roofline_attrs(runtime: MapReduceRuntime, n_candidates: int,
+                         n_txns: int, n_words: int, kmax: int,
+                         seconds: float) -> dict:
+    """Achieved-vs-peak span attributes for one counting job, computed by
+    the same ``roofline.count_kernel_roofline`` that BENCH_kernels.json
+    uses — traces and benchmarks report from one set of numbers
+    (DESIGN.md §10/§13)."""
+    try:
+        import jax
+
+        from repro.roofline import count_kernel_roofline
+        roof = count_kernel_roofline(
+            _impl_family(runtime.impl), C=n_candidates, T=n_txns,
+            W=n_words, kmax=kmax, seconds=max(seconds, 1e-9),
+            backend=jax.default_backend())
+        return {"roofline_bound": roof["bound"],
+                "roofline_achieved": roof["achieved"],
+                "roofline_peak": roof["peak"],
+                "roofline_peak_frac": roof["peak_frac"]}
+    except Exception:   # uncalibrated peaks table / exotic backend
+        return {}
 
 
 def bucket_pad(cands: np.ndarray, min_bucket: int = MIN_BUCKET,
@@ -105,10 +139,12 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     Returns a PhaseResult with per-level frequent itemsets.
     """
     assert (npass is None) != (budget is None), "exactly one of npass/budget"
+    tracer = current_tracer()
     t0 = time.perf_counter()
     levels_cands: list[np.ndarray] = []
     cur = prev_frequent
     p, total = 0, 0
+    gen_span = tracer.span("mine.gen", k_start=k_prev + 1)
     while True:
         if p == 0 and spec is not None and prev_keep is not None:
             # first-level join precomputed during the previous phase's count
@@ -127,6 +163,7 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
         if budget is not None and total > budget:
             break
     t_gen = time.perf_counter() - t0
+    gen_span.set(n_levels=len(levels_cands), n_candidates=total).close()
 
     if not levels_cands:
         return PhaseResult(k_prev + 1, 0, [], t_gen, 0.0,
@@ -135,9 +172,14 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     all_cands = np.concatenate(levels_cands, axis=0)
     padded = bucket_pad(all_cands, min_bucket)
     t1 = time.perf_counter()
+    count_span = tracer.span(
+        "mine.count", k_start=k_prev + 1, npass=len(levels_cands),
+        n_candidates=int(all_cands.shape[0]), padded=int(padded.shape[0]),
+        impl=runtime.impl, fused=fused)
     fut = runtime.phase_count_async(db_sharded, padded,
                                     min_count=min_count if fused else None,
                                     n_valid=all_cands.shape[0])
+    count_span.event("count.dispatch")
     if count_hook is not None:
         count_hook("count_dispatch", k_prev + 1)
 
@@ -146,8 +188,10 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
     if speculate:
         in_flight = not fut.ready()
         ts = time.perf_counter()
-        spec_next = speculative_join(levels_cands[-1],
-                                     k_prev + len(levels_cands))
+        with tracer.span("mine.spec_join", k=k_prev + len(levels_cands) + 1,
+                         in_flight=in_flight):
+            spec_next = speculative_join(levels_cands[-1],
+                                         k_prev + len(levels_cands))
         t_spec = time.perf_counter() - ts
         if in_flight:
             # upper bound: the job may complete mid-join; count_seconds below
@@ -161,6 +205,13 @@ def run_phase(runtime: MapReduceRuntime, db_sharded, n_txns: int,
         counts_all = fut.result()
         keep_all = None
     t_count = max(time.perf_counter() - t1 - t_spec, 0.0)
+    if tracer.enabled:
+        count_span.set(
+            count_seconds=t_count, overlap_seconds=overlapped,
+            **count_roofline_attrs(
+                runtime, int(padded.shape[0]), n_txns, int(padded.shape[1]),
+                k_prev + len(levels_cands), t_count))
+    count_span.close()
 
     counts = counts_all[:all_cands.shape[0]]
     levels = {}

@@ -44,6 +44,9 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.obs.metrics import get_registry
+from repro.obs.trace import current_tracer
+
 from repro.roofline import XFER_OPS_PER_BYTE, count_job_ops
 
 from .measure import device_key
@@ -61,12 +64,36 @@ class Decision:
     predicted: dict           # option → predicted seconds (or {"cost": x})
     chosen: object            # the decision taken
     measured: float | None = None   # realized seconds, filled by observe_*
+    # live view of this decision inside an exported trace (DESIGN.md §13);
+    # None when tracing is off
+    trace_args: dict | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def as_dict(self) -> dict:
         return {"site": self.site, "key": self.key, "chosen": self.chosen,
                 "predicted": {str(k): float(v)
                               for k, v in self.predicted.items()},
                 "measured": self.measured}
+
+    def predicted_chosen(self) -> float | None:
+        """The predicted cost of the option actually taken (if priced)."""
+        for k in (self.chosen, str(self.chosen)):
+            if k in self.predicted:
+                return float(self.predicted[k])
+        return None
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        if name == "measured" and value is not None:
+            # observe_* backfills realized cost after the fact; mirror it
+            # into the trace event's (shared, mutable) args so exported
+            # traces carry predicted-vs-measured residuals
+            args = getattr(self, "trace_args", None)
+            if args is not None:
+                args["measured"] = float(value)
+                pred = self.predicted_chosen()
+                if pred is not None:
+                    args["residual"] = float(value) - pred
 
 
 class CostController:
@@ -106,6 +133,17 @@ class CostController:
         self.decisions.append(dec)
         if len(self.decisions) > MAX_DECISIONS:
             del self.decisions[:len(self.decisions) - MAX_DECISIONS]
+        get_registry().counter("costmodel.decisions", site=dec.site).inc()
+        tracer = current_tracer()
+        if tracer.enabled:
+            # the event's args dict stays live: Decision.__setattr__ writes
+            # measured/residual into it when observe_* backfills
+            args = dec.as_dict()
+            pred = dec.predicted_chosen()
+            if pred is not None:
+                args["predicted_chosen"] = pred
+            dec.trace_args = args
+            tracer.event(f"decision.{dec.site}", args=args)
         return dec
 
     def decision_rows(self, since: int = 0) -> list:

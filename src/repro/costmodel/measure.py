@@ -20,7 +20,6 @@ from __future__ import annotations
 import json
 import os
 import re
-import time
 
 
 def cache_dir() -> str:
@@ -41,22 +40,33 @@ def device_key(backend: str | None = None) -> str:
     return f"{backend}:{kind}"
 
 
-def time_once(fn, reps: int = 2) -> float:
+def time_once(fn, reps: int = 2, clock=None) -> float:
     """Best-of-``reps`` wall time of ``fn()`` after one warm-up call.
 
     The warm-up run pays compile cost; the timed runs block on the result, so
     the number is steady-state device time + dispatch overhead — exactly what
     the cost model wants to fit and the autotuner wants to rank.
+
+    ``clock`` follows the injectable-clock contract (DESIGN.md §13): any
+    object with ``now() -> float`` seconds; default the monotonic wall
+    clock.  Tests pass :class:`repro.obs.clock.FakeClock` to script timings.
     """
     import jax
+    if clock is None:
+        clock = _monotonic_clock()
     out = fn()                      # warm-up: compile + first run
     jax.block_until_ready(out)
     best = float("inf")
     for _ in range(max(reps, 1)):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock.now() - t0)
     return best
+
+
+def _monotonic_clock():
+    from repro.obs.clock import MonotonicClock
+    return MonotonicClock()
 
 
 class JsonStore:

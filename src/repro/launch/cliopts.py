@@ -98,6 +98,50 @@ def add_serving_args(ap: argparse.ArgumentParser) -> None:
                         "over-share tenants' queued queries")
 
 
+def add_obs_args(ap: argparse.ArgumentParser) -> None:
+    """Attach the unified observability flag group (DESIGN.md §13)."""
+    g = ap.add_argument_group(
+        "observability",
+        "unified tracing + metrics (DESIGN.md §13); disabled flags cost "
+        "nothing (no-op span fast path)")
+    g.add_argument("--trace-out", default=None,
+                   help="write a Chrome-trace-event JSON of this run "
+                        "(open in ui.perfetto.dev, or render with "
+                        "`python -m repro.launch.report --trace`)")
+    g.add_argument("--metrics-out", default=None,
+                   help="write the versioned metrics-registry snapshot "
+                        "(validate with `python -m repro.obs.validate`)")
+
+
+def tracer_from_args(args: argparse.Namespace):
+    """Install (and return) a live tracer when ``--trace-out`` was given;
+    otherwise leave the zero-overhead NULL_TRACER active."""
+    from repro.obs.trace import NULL_TRACER, Tracer, set_tracer
+    if getattr(args, "trace_out", None):
+        return set_tracer(Tracer())
+    return NULL_TRACER
+
+
+def write_obs_outputs(args: argparse.Namespace, tracer=None) -> None:
+    """Flush ``--trace-out`` / ``--metrics-out`` files at the end of a run."""
+    import json
+
+    if getattr(args, "trace_out", None) and tracer is not None \
+            and tracer.enabled:
+        tracer.export(args.trace_out)
+        print(f"trace: {len(tracer.spans)} spans + {len(tracer.events)} "
+              f"events -> {args.trace_out} (open in ui.perfetto.dev)")
+    if getattr(args, "metrics_out", None):
+        from repro.obs.metrics import get_registry
+        snap = get_registry().snapshot()
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=2)
+        n = (len(snap["counters"]) + len(snap["gauges"])
+             + len(snap["histograms"]))
+        print(f"metrics: {n} series (schema v{snap['schema_version']}) "
+              f"-> {args.metrics_out}")
+
+
 def add_mesh_args(ap: argparse.ArgumentParser) -> None:
     """Attach the uniform mesh / distributed-launch knob group (§11).
 

@@ -12,8 +12,10 @@ import json
 from repro.core import ALGORITHMS, mine
 from repro.core.mapreduce import IMPLS
 from repro.data import dataset_by_name, load_transactions
-from repro.launch.cliopts import (add_mesh_args, add_policy_args,
-                                  policy_kwargs_from_args, runtime_from_args)
+from repro.launch.cliopts import (add_mesh_args, add_obs_args,
+                                  add_policy_args, policy_kwargs_from_args,
+                                  runtime_from_args, tracer_from_args,
+                                  write_obs_outputs)
 
 
 def main():
@@ -33,7 +35,9 @@ def main():
     ap.add_argument("--json-out", default=None)
     add_policy_args(ap)
     add_mesh_args(ap)
+    add_obs_args(ap)
     args = ap.parse_args()
+    tracer = tracer_from_args(args)
 
     if args.input:
         txns, n_items = load_transactions(args.input)
@@ -70,6 +74,7 @@ def main():
                        "total_seconds": res.total_seconds,
                        "dispatches": res.dispatches,
                        "decisions": res.decisions}, f, indent=2)
+    write_obs_outputs(args, tracer)
 
 
 if __name__ == "__main__":

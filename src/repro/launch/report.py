@@ -1,8 +1,14 @@
 """Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.jsonl —
-and, with ``--decisions``, the cost-model §Decisions table (DESIGN.md §9).
+with ``--decisions``, the cost-model §Decisions table (DESIGN.md §9) — and
+with ``--trace``, the top-slowest-spans + per-phase breakdown of a
+``--trace-out`` file (DESIGN.md §13).
 
   PYTHONPATH=src python -m repro.launch.report results/dryrun.jsonl
   PYTHONPATH=src python -m repro.launch.report --decisions results/decisions.jsonl
+  PYTHONPATH=src python -m repro.launch.report --trace trace.json
+
+``--decisions`` accepts a jsonl of decision rows or any of the CLIs'
+``--json-out`` files (``mine``, ``stream``, ``serve_rules``).
 """
 
 from __future__ import annotations
@@ -148,9 +154,91 @@ def outcome_table(summary: dict) -> str:
     return "\n".join(lines)
 
 
+def load_trace(path) -> list:
+    """Events from a Chrome-trace-event file (object format or bare array)."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else doc
+    return [e for e in events if isinstance(e, dict)]
+
+
+def trace_spans(events) -> list:
+    """Complete ("X") spans with per-span *self* time — duration minus the
+    time covered by nested spans on the same (pid, tid) track, recovered
+    from interval containment (the Chrome format keeps no explicit tree)."""
+    spans = [dict(e) for e in events if e.get("ph") == "X"]
+    by_track: dict = defaultdict(list)
+    for s in spans:
+        s["child_us"] = 0.0
+        by_track[(s.get("pid"), s.get("tid"))].append(s)
+    for track in by_track.values():
+        track.sort(key=lambda s: (s["ts"], -float(s.get("dur", 0.0))))
+        stack: list = []
+        for s in track:
+            while stack and (stack[-1]["ts"] + float(stack[-1].get("dur", 0.0))
+                             <= s["ts"] + 1e-9):
+                stack.pop()
+            if stack:
+                stack[-1]["child_us"] += float(s.get("dur", 0.0))
+            stack.append(s)
+    for s in spans:
+        s["self_us"] = max(float(s.get("dur", 0.0)) - s["child_us"], 0.0)
+    return spans
+
+
+def trace_slowest_table(spans, top: int = 15) -> str:
+    """Top-N slowest spans by duration."""
+    out = ["| span | dur ms | self ms | attrs |", "|---|---|---|---|"]
+    ranked = sorted(spans, key=lambda s: -float(s.get("dur", 0.0)))[:top]
+    for s in ranked:
+        attrs = ", ".join(
+            f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in sorted((s.get("args") or {}).items())[:4])
+        out.append(f"| {s.get('name')} | {float(s.get('dur', 0.0))/1e3:.2f} | "
+                   f"{s['self_us']/1e3:.2f} | {attrs or '—'} |")
+    return "\n".join(out)
+
+
+def trace_phase_table(spans) -> str:
+    """Per-span-name time breakdown (count, total, self, mean)."""
+    agg: dict = defaultdict(lambda: [0, 0.0, 0.0])
+    for s in spans:
+        a = agg[s.get("name")]
+        a[0] += 1
+        a[1] += float(s.get("dur", 0.0))
+        a[2] += s["self_us"]
+    total_self = sum(a[2] for a in agg.values()) or 1.0
+    out = ["| phase | n | total ms | self ms | mean ms | self % |",
+           "|---|---|---|---|---|---|"]
+    for name, (n, dur, self_us) in sorted(agg.items(),
+                                          key=lambda kv: -kv[1][2]):
+        out.append(f"| {name} | {n} | {dur/1e3:.2f} | {self_us/1e3:.2f} | "
+                   f"{dur/n/1e3:.2f} | {self_us/total_self:.1%} |")
+    return "\n".join(out)
+
+
+def report_trace(path, top: int = 15):
+    events = load_trace(path)
+    spans = trace_spans(events)
+    if not spans:
+        print(f"{path}: no complete spans found")
+        return
+    n_inst = sum(1 for e in events if e.get("ph") == "i")
+    print(f"## Trace {path}: {len(spans)} spans, {n_inst} events\n")
+    print(f"### Top {min(top, len(spans))} slowest spans\n")
+    print(trace_slowest_table(spans, top))
+    print()
+    print("### Per-phase time breakdown\n")
+    print(trace_phase_table(spans))
+
+
 def report_decisions(path):
     rows = load_decisions(path)
     print(f"## Cost-model decisions ({path})\n")
+    if not rows:
+        print("no decision rows found — pass a decisions jsonl or a "
+              "--json-out file from mine/stream/serve_rules")
+        return
     print(decision_summary(rows))
     print()
     print(decision_table(rows))
@@ -169,9 +257,17 @@ def main():
     ap.add_argument("path", nargs="?", default="results/dryrun.jsonl")
     ap.add_argument("--decisions", metavar="JSONL", default=None,
                     help="render the cost-model decision telemetry table from "
-                         "a jsonl of CostController.decision_rows dicts "
-                         "instead of the dry-run tables")
+                         "a jsonl of CostController.decision_rows dicts or a "
+                         "mine/stream/serve_rules --json-out file")
+    ap.add_argument("--trace", metavar="JSON", default=None,
+                    help="render top-slowest-spans + per-phase breakdown "
+                         "from a --trace-out Chrome-trace file")
+    ap.add_argument("--top", type=int, default=15,
+                    help="rows in the --trace slowest-spans table")
     args = ap.parse_args()
+    if args.trace:
+        report_trace(args.trace, top=args.top)
+        return
     if args.decisions:
         report_decisions(args.decisions)
         return

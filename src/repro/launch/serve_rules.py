@@ -30,8 +30,9 @@ from repro.core.mapreduce import MapReduceRuntime
 from repro.core.policy import ALGORITHMS
 from repro.costmodel import CostController
 from repro.data import dataset_by_name, load_transactions
-from repro.launch.cliopts import (add_policy_args, add_serving_args,
-                                  policy_kwargs_from_args)
+from repro.launch.cliopts import (add_obs_args, add_policy_args,
+                                  add_serving_args, policy_kwargs_from_args,
+                                  tracer_from_args, write_obs_outputs)
 from repro.serving import (RULE_IMPLS, OpenLoopServer, RuleServeEngine,
                            RuleStore)
 from repro.serving.common import latency_ms
@@ -89,7 +90,9 @@ def main():
     ap.add_argument("--json-out", default=None)
     add_policy_args(ap)
     add_serving_args(ap)
+    add_obs_args(ap)
     args = ap.parse_args()
+    tracer = tracer_from_args(args)
 
     if args.input:
         txns, n_items = load_transactions(args.input)
@@ -156,6 +159,7 @@ def main():
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(record, f, indent=2)
+    write_obs_outputs(args, tracer)
 
 
 def serve_closed_loop(eng, queries, args, record: dict) -> None:
@@ -189,10 +193,12 @@ def serve_closed_loop(eng, queries, args, record: dict) -> None:
 def serve_open_loop(eng, queries, args, controller, record: dict) -> None:
     """Open-loop arrival replay (DESIGN.md §12): virtual arrival clock at
     ``--rate-qps``, real measured dispatch costs, SLO admission + caching."""
+    from repro.obs.metrics import get_registry
     srv = OpenLoopServer(
         eng, latency_slo_ms=args.latency_slo_ms, batch=args.batch,
         max_wait_ms=args.max_wait_ms, cache_size=args.cache_size,
-        fair_shedding=not args.no_fair_shedding, controller=controller)
+        fair_shedding=not args.no_fair_shedding, controller=controller,
+        registry=get_registry())   # one server: feed the process snapshot
     rng = np.random.default_rng(args.seed + 2)
     gaps = rng.uniform(0.7, 1.3, len(queries)) / args.rate_qps
     t = 0.0

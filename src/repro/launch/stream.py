@@ -23,7 +23,9 @@ import numpy as np
 
 from repro.core.policy import ALGORITHMS
 from repro.data import dataset_by_name, load_transactions
-from repro.launch.cliopts import add_policy_args, policy_kwargs_from_args
+from repro.launch.cliopts import (add_obs_args, add_policy_args,
+                                  policy_kwargs_from_args, tracer_from_args,
+                                  write_obs_outputs)
 from repro.launch.serve_rules import make_queries
 from repro.serving.common import latency_percentiles
 from repro.stream import StreamMiner
@@ -56,7 +58,9 @@ def main():
                     help="live recommendation queries after each update (0=off)")
     ap.add_argument("--json-out", default=None)
     add_policy_args(ap)
+    add_obs_args(ap)
     args = ap.parse_args()
+    tracer = tracer_from_args(args)
 
     if args.input:
         txns, n_items = load_transactions(args.input)
@@ -127,9 +131,13 @@ def main():
             "n_frequent": miner.n_frequent, "n_rules": miner.engine.n_rules,
             "update_p50_ms": float(np.percentile(upd_ms, 50)) if ups else 0.0,
             "update_p99_ms": float(np.percentile(upd_ms, 99)) if ups else 0.0,
+            # controller telemetry, in the same shape mine/serve_rules emit —
+            # `report --decisions` accepts this file directly
+            "decisions": miner.controller.decision_rows(),
         }
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)
+    write_obs_outputs(args, tracer)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Observability: unified tracing + metrics across mine → stream → serve
+(DESIGN.md §13).
+
+* :mod:`repro.obs.clock` — the injectable-clock contract
+  (:class:`MonotonicClock` default, :class:`FakeClock` for tests).
+* :mod:`repro.obs.trace` — nested spans with attributes and instant
+  events, exported as Chrome-trace-event JSON for ``ui.perfetto.dev``;
+  near-zero overhead when disabled (``NULL_TRACER`` fast path).
+* :mod:`repro.obs.metrics` — process-wide counter/gauge/histogram
+  registry with a versioned snapshot schema; ``python -m
+  repro.obs.validate`` checks snapshots in CI.
+"""
+
+from repro.obs.clock import FakeClock, MonotonicClock
+from repro.obs.metrics import (SCHEMA_VERSION, Registry, get_registry,
+                               set_registry, validate_snapshot)
+from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
+                             current_tracer, set_tracer, use_tracer)
+
+__all__ = [
+    "FakeClock", "MonotonicClock",
+    "SCHEMA_VERSION", "Registry", "get_registry", "set_registry",
+    "validate_snapshot",
+    "NULL_TRACER", "NullTracer", "Span", "Tracer",
+    "current_tracer", "set_tracer", "use_tracer",
+]

@@ -40,9 +40,11 @@ is exactly what the closed-loop arms hide.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
 
+from repro.obs.clock import MonotonicClock
+from repro.obs.metrics import Registry
+from repro.obs.trace import current_tracer
 from repro.roofline import XFER_OPS_PER_BYTE
 
 from .rule_store import DEFAULT_TENANT
@@ -63,11 +65,22 @@ class ResultCache:
     so a swap invalidates a tenant's answers atomically without a scan.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, registry: Registry | None = None):
         self.capacity = int(capacity)
         self._data: OrderedDict = OrderedDict()
-        self.hits = 0
-        self.misses = 0
+        # hit/miss telemetry lives in a metrics registry (DESIGN.md §13);
+        # a private one by default so unrelated caches never share counts
+        self._metrics = registry if registry is not None else Registry()
+        self._hits = self._metrics.counter("serving.cache_hits")
+        self._misses = self._metrics.counter("serving.cache_misses")
+
+    @property
+    def hits(self) -> int:
+        return int(self._hits.value)
+
+    @property
+    def misses(self) -> int:
+        return int(self._misses.value)
 
     def __len__(self) -> int:
         return len(self._data)
@@ -77,10 +90,10 @@ class ResultCache:
             return None
         key = (tenant, version, basket_key(basket), k)
         if key not in self._data:
-            self.misses += 1
+            self._misses.inc()
             return None
         self._data.move_to_end(key)
-        self.hits += 1
+        self._hits.inc()
         return self._data[key]
 
     def put(self, tenant: str, version: int, basket, k: int, recs) -> None:
@@ -145,19 +158,30 @@ class OpenLoopServer:
       dispatch_cost_fn: ``(n_queries, work_ops) -> seconds`` override for the
         virtual dispatch cost; None measures the real serve call.
       top_k: recommendations per query (default: engine top_k).
+      clock: injectable clock (DESIGN.md §13) for the *real* dispatch-cost
+        measurement; default :class:`~repro.obs.clock.MonotonicClock`, tests
+        pass :class:`~repro.obs.clock.FakeClock`.  (The latency math itself
+        runs on the virtual arrival clock regardless.)
+      registry: metrics registry fed with per-tenant offered/admitted/shed
+        counters and latency histograms; default a private
+        :class:`~repro.obs.metrics.Registry` so concurrent servers never
+        share fair-shedding accounting.  CLIs pass the process-wide one.
     """
 
     def __init__(self, engine, *, latency_slo_ms: float | None = None,
                  batch: int = 8, max_wait_ms: float = 5.0,
                  cache_size: int = 256, fair_shedding: bool = True,
                  controller=None, dispatch_cost_fn=None,
-                 top_k: int | None = None):
+                 top_k: int | None = None, clock=None,
+                 registry: Registry | None = None):
         self.engine = engine
         self.latency_slo_s = (None if latency_slo_ms is None
                               else float(latency_slo_ms) / 1e3)
         self.batch = max(int(batch), 1)
         self.max_wait_s = float(max_wait_ms) / 1e3
-        self.cache = ResultCache(cache_size)
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.metrics = registry if registry is not None else Registry()
+        self.cache = ResultCache(cache_size, registry=self.metrics)
         self.fair_shedding = fair_shedding
         self.controller = (controller if controller is not None
                            else getattr(engine, "controller", None))
@@ -168,9 +192,7 @@ class OpenLoopServer:
         self.dispatches = 0
         self._queue: list[_Pending] = []
         self._seq = 0
-        self._offered: dict[str, int] = {}    # per-tenant traffic counters
-        self._admitted: dict[str, int] = {}
-        self._shed: dict[str, int] = {}
+        self._tenants: list[str] = []    # insertion-ordered active tenants
 
     # -- work accounting (same ops basis as the engine, DESIGN.md §10) ---------
 
@@ -203,7 +225,12 @@ class OpenLoopServer:
             out.t_done = out.t_arrival
             out.latency_s = 0.0
             out.results = hit
-            self._admitted[tenant] += 1
+            self._count(tenant, "admitted")
+            self.metrics.histogram("serving.latency_ms",
+                                   tenant=tenant).observe(0.0)
+            current_tracer().add_span(
+                "serve.query", out.t_arrival, out.t_arrival, tid="queries",
+                tenant=tenant, outcome="cached", seq=out.seq)
             return out
 
         # 2) SLO admission against predicted sojourn
@@ -218,11 +245,15 @@ class OpenLoopServer:
             if not admit and not self._try_displace(tenant):
                 out.outcome = "shed"
                 dec.measured = 0.0
-                self._shed[tenant] += 1
+                self._count(tenant, "shed")
+                current_tracer().add_span(
+                    "serve.query", out.t_arrival, out.t_arrival,
+                    tid="queries", tenant=tenant, outcome="shed",
+                    seq=out.seq)
                 return out
 
         self._queue.append(_Pending(out, tuple(basket), dec))
-        self._admitted[tenant] += 1
+        self._count(tenant, "admitted")
         if len(self._queue) >= self.batch:
             self._dispatch_group(t_arrival)
         return out
@@ -236,9 +267,15 @@ class OpenLoopServer:
     # -- internals -------------------------------------------------------------
 
     def _seen(self, tenant: str) -> None:
-        self._offered[tenant] = self._offered.get(tenant, 0) + 1
-        self._admitted.setdefault(tenant, 0)
-        self._shed.setdefault(tenant, 0)
+        if tenant not in self._tenants:
+            self._tenants.append(tenant)
+        self._count(tenant, "offered")
+
+    def _count(self, tenant: str, what: str, n: float = 1) -> None:
+        self.metrics.counter(f"serving.{what}", tenant=tenant).inc(n)
+
+    def _tenant_n(self, tenant: str, what: str) -> float:
+        return self.metrics.value(f"serving.{what}", tenant=tenant)
 
     def _try_displace(self, tenant: str) -> bool:
         """Fair shedding: if ``tenant`` is under its fair share of admitted
@@ -246,15 +283,16 @@ class OpenLoopServer:
         tenant (≠ this one) and admit the arrival in its place."""
         if not self.fair_shedding or not self._queue:
             return False
-        active = [t for t in self._offered if self._offered[t] > 0]
+        active = [t for t in self._tenants if self._tenant_n(t, "offered") > 0]
         if len(active) < 2:
             return False
-        fair = sum(self._admitted.values()) / len(active)
-        if self._admitted[tenant] >= fair:
+        admitted = {t: self._tenant_n(t, "admitted") for t in self._tenants}
+        fair = sum(admitted.values()) / len(active)
+        if admitted[tenant] >= fair:
             return False
         heavy = max((t for t in active if t != tenant),
-                    key=lambda t: self._admitted[t], default=None)
-        if heavy is None or self._admitted[heavy] <= fair:
+                    key=lambda t: admitted[t], default=None)
+        if heavy is None or admitted[heavy] <= fair:
             return False
         for i in range(len(self._queue) - 1, -1, -1):
             p = self._queue[i]
@@ -263,8 +301,12 @@ class OpenLoopServer:
                 p.outcome.outcome = "shed"
                 if p.decision is not None:
                     p.decision.measured = 0.0
-                self._admitted[heavy] -= 1
-                self._shed[heavy] += 1
+                self._count(heavy, "admitted", -1)   # admission revoked
+                self._count(heavy, "shed")
+                current_tracer().add_span(
+                    "serve.query", p.outcome.t_arrival,
+                    p.outcome.t_arrival, tid="queries", tenant=heavy,
+                    outcome="shed", displaced=True, seq=p.outcome.seq)
                 return True
         return False
 
@@ -286,9 +328,9 @@ class OpenLoopServer:
         versions = {p.outcome.tenant:
                     state.versions.get(p.outcome.tenant, 0) for p in group}
 
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         results, records = self.engine.serve([pairs], top_k=self.top_k)
-        real = time.perf_counter() - t0
+        real = self.clock.now() - t0
         per_query = self._per_query_work(state)
         work = per_query * len(group)
         cost = (real if self.dispatch_cost_fn is None
@@ -307,6 +349,9 @@ class OpenLoopServer:
                 or getattr(self.engine, "controller", None) is None):
             self.controller.observe_serve(per_query, len(group), cost)
 
+        tracer = current_tracer()
+        tracer.add_span("serve.dispatch", start, done, tid="device",
+                        dispatch=idx, n_queries=len(group), cost_s=cost)
         for p, recs in zip(group, results[0]):
             out = p.outcome
             out.outcome = "served"
@@ -317,6 +362,14 @@ class OpenLoopServer:
             out.results = recs
             if p.decision is not None:
                 p.decision.measured = out.latency_s
+            self.metrics.histogram(
+                "serving.latency_ms",
+                tenant=out.tenant).observe(out.latency_s * 1e3)
+            tracer.add_span(
+                "serve.query", out.t_arrival, done, tid="queries",
+                tenant=out.tenant, outcome="served", seq=out.seq,
+                queue_wait_ms=(start - out.t_arrival) * 1e3,
+                dispatch=idx, n_fused=len(group))
             k = self.top_k if self.top_k is not None else self.engine.top_k
             self.cache.put(out.tenant, versions[out.tenant], p.basket, k,
                            recs)
@@ -329,4 +382,10 @@ class OpenLoopServer:
         s["dispatches"] = self.dispatches
         s["cache"] = {"hits": self.cache.hits, "misses": self.cache.misses,
                       "entries": len(self.cache)}
+        # derived headline gauges for the metrics snapshot (DESIGN.md §13)
+        answered = s["served"] + s["cached"]
+        self.metrics.gauge("serving.shed_rate").set(s["shed_rate"])
+        self.metrics.gauge("serving.cache_hit_rate").set(s["cache_hit_rate"])
+        self.metrics.gauge("serving.qps").set(
+            answered / max(self.busy_until, 1e-9))
         return s

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.policy import ALGORITHMS, PhaseStats
 from repro.core.rules import RuleSet
+from repro.obs.trace import current_tracer
 from repro.kernels.autotune import DEFAULTS, tuned_blocks, tuned_plan
 from repro.kernels.rule_match import (rule_scores_jnp, rule_scores_matmul,
                                       rule_scores_matmul_pallas,
@@ -376,14 +377,19 @@ class RuleServeEngine:
             flat = [pair for batch in group for pair in batch]
 
             t0 = time.perf_counter()
-            if flat:
-                kf = (min(k * self.overfetch, n_rules)
-                      if self.dedup_consequents else k)
-                vals, idx = self._dispatch(state, state.pack(flat), kf)
-                decoded = self._decode(state, vals, idx, k)
-            else:
-                decoded = []
+            with current_tracer().span(
+                    "serve.engine_dispatch", n_batches=nfuse,
+                    n_queries=len(flat), n_rules=n_rules,
+                    impl=self.impl) as dspan:
+                if flat:
+                    kf = (min(k * self.overfetch, n_rules)
+                          if self.dedup_consequents else k)
+                    vals, idx = self._dispatch(state, state.pack(flat), kf)
+                    decoded = self._decode(state, vals, idx, k)
+                else:
+                    decoded = []
             elapsed = time.perf_counter() - t0
+            dspan.set(elapsed_seconds=elapsed)
 
             off = 0
             for sz in sizes:

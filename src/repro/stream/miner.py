@@ -46,6 +46,7 @@ from repro.core.phases import bucket_pad
 from repro.core.policy import ALGORITHMS
 from repro.core.rules import generate_ruleset
 from repro.kernels.delta_count import delta_count
+from repro.obs.trace import current_tracer
 from repro.serving.rules_engine import RuleServeEngine
 
 from .tables import (TrackedTables, build_tracked_levels, derive_frequent,
@@ -222,6 +223,8 @@ class StreamMiner:
         """Full from-scratch mine + per-level border jobs; re-tightens the
         tables around the current window (margin-expanded, see tables.py)."""
         t0 = time.perf_counter()
+        remine_span = current_tracer().span("stream.remine",
+                                            window=self.window.size)
         contents = self.window.contents()
         res = mine(db_masks=contents, n_items=self.n_items,
                    min_sup=self.min_sup, algorithm=self.algorithm,
@@ -238,6 +241,8 @@ class StreamMiner:
             self.track_margin, count_fn)
         self._tables = TrackedTables(tracked)
         self._remine_seconds = time.perf_counter() - t0
+        remine_span.set(seconds=self._remine_seconds,
+                        n_tracked=self._tables.n_tracked).close()
         # calibrate the predictor: one sample per completed re-mine, in the
         # window-rows ops basis (mine + border jobs + table rebuild, end to end)
         self.controller.observe_remine(self.window.size, self._remine_seconds)
@@ -247,7 +252,11 @@ class StreamMiner:
         return dict(res.levels)
 
     def _apply(self, delta) -> StreamUpdate:
+        tracer = current_tracer()
         t0 = time.perf_counter()
+        upd_span = tracer.span("stream.update", seq=len(self.updates),
+                               n_added=delta.n_added,
+                               n_evicted=delta.n_evicted)
         delta_s = remine_s = 0.0
         if self.window.size == 0:
             # empty window: min_count would be 0 and "frequent" degenerate —
@@ -261,12 +270,15 @@ class StreamMiner:
             path = "remine"
         else:
             td = time.perf_counter()
-            deltas = delta_count(self._tables.cat_padded, delta.added,
-                                 delta.evicted, impl=self.impl,
-                                 autotune=self.autotune)
-            self._tables.apply_delta(deltas[:self._tables.n_tracked])
-            derived = derive_frequent(self._tables,
-                                      self.min_sup * self.window.size)
+            with tracer.span("stream.delta_count",
+                             n_tracked=self._tables.n_tracked,
+                             impl=self.impl):
+                deltas = delta_count(self._tables.cat_padded, delta.added,
+                                     delta.evicted, impl=self.impl,
+                                     autotune=self.autotune)
+                self._tables.apply_delta(deltas[:self._tables.n_tracked])
+                derived = derive_frequent(self._tables,
+                                          self.min_sup * self.window.size)
             delta_s = time.perf_counter() - td
             self._delta_seconds_accum += delta_s
             self._rows_since_remine += delta.n_added + delta.n_evicted
@@ -294,10 +306,15 @@ class StreamMiner:
         refresh_s = 0.0
         if changed and self.refresh_rules:
             tr = time.perf_counter()
-            ruleset = generate_ruleset(self.result(), self.min_confidence)
-            self.engine.swap_rules(ruleset, warm_to=self.warm_queries or None)
+            with tracer.span("stream.refresh_rules"):
+                ruleset = generate_ruleset(self.result(), self.min_confidence)
+                self.engine.swap_rules(ruleset,
+                                       warm_to=self.warm_queries or None)
             refresh_s = time.perf_counter() - tr
 
+        upd_span.set(path=path, window=self.window.size,
+                     n_frequent=self.n_frequent,
+                     levels_changed=changed).close()
         rec = StreamUpdate(
             seq=len(self.updates), path=path,
             n_added=delta.n_added, n_evicted=delta.n_evicted,

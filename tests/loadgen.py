@@ -3,10 +3,12 @@
 Tier-1 latency/shedding assertions must be exact, so nothing here touches the
 wall clock: arrivals are synthetic timestamps from a seeded generator,
 dispatch costs are scripted functions, and the only "clock" is
-:class:`FakeClock` — virtual time that moves when the test says so.  The
-:class:`~repro.serving.admission.OpenLoopServer` consumes these directly
-(its latency math is closed over submitted timestamps + scripted costs), so
-a load test is a pure function of its seed.
+:class:`repro.obs.clock.FakeClock` — virtual time that moves when the test
+says so (re-exported here for convenience; the tracer, ``time_once`` and the
+:class:`~repro.serving.admission.OpenLoopServer` all accept the same clock
+object, DESIGN.md §13).  The server consumes these directly (its latency
+math is closed over submitted timestamps + scripted costs), so a load test
+is a pure function of its seed.
 """
 
 from __future__ import annotations
@@ -14,20 +16,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import generate_ruleset, mine
+from repro.obs.clock import FakeClock
 
-
-class FakeClock:
-    """Manually-advanced virtual clock (no sleeps, no wall time)."""
-
-    def __init__(self, t0: float = 0.0):
-        self.t = float(t0)
-
-    def now(self) -> float:
-        return self.t
-
-    def advance(self, dt: float) -> float:
-        self.t += float(dt)
-        return self.t
+__all__ = ["FakeClock", "make_ruleset", "arrivals", "tenant_mix",
+           "constant_cost", "per_query_cost", "drive"]
 
 
 def make_ruleset(seed: int, n_items: int = 12, n_txns: int = 120,

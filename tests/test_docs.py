@@ -151,3 +151,21 @@ def test_measured_policy_documented():
     for primitive in ("choose_width", "should_remine", "choose_fusion",
                       "should_speculate"):
         assert primitive in design, f"DESIGN.md §9 must document {primitive}"
+
+
+def test_observability_documented():
+    """The §13 observability layer stays documented: the README quickstart
+    (trace/metrics flags, Perfetto, report + validate commands), the
+    DESIGN section, and its public surfaces."""
+    readme = (ROOT / "README.md").read_text()
+    assert "## Observability" in readme
+    for flag in ("--trace-out", "--metrics-out", "ui.perfetto.dev",
+                 "repro.obs.validate", "--trace trace.json"):
+        assert flag in readme, f"README Observability quickstart must show {flag}"
+    assert 13 in _design_sections()
+    design = (ROOT / "DESIGN.md").read_text()
+    for surface in ("Tracer", "FakeClock", "MonotonicClock", "NULL_TRACER",
+                    "schema_version", "validate_snapshot", "add_span",
+                    "serve.query", "mine.phase", "roofline_peak_frac",
+                    "decision."):
+        assert surface in design, f"DESIGN.md §13 must document {surface}"
